@@ -1,0 +1,36 @@
+"""Run a snippet in a subprocess with N fake XLA host devices (bench helper)."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = " --xla_force_host_platform_device_count={ndev}"
+import jax
+jax.config.update("jax_platform_name", "cpu")
+import numpy as np
+import jax.numpy as jnp
+"""
+
+
+def run_snippet(snippet: str, ndev: int = 8, timeout: int = 1200) -> str:
+    code = PRELUDE.format(ndev=ndev) + textwrap.dedent(snippet)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"bench subprocess failed\n--- stdout ---\n{proc.stdout}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout

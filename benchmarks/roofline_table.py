@@ -1,0 +1,89 @@
+"""Aggregate the dry-run JSONs into the §Dry-run/§Roofline tables.
+
+Writes results/roofline.md (markdown) and prints a compact table.
+Roofline fraction := useful-model-compute time / dominant-term time,
+i.e. (MODEL_FLOPS/chips/peak) / max(compute_s, memory_s, collective_s).
+"""
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "dryrun")
+OUT = os.path.join(os.path.dirname(RESULTS), "roofline.md")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    rows = []
+    if not os.path.isdir(RESULTS):
+        return rows
+    for fn in sorted(os.listdir(RESULTS)):
+        if fn.endswith(".json"):
+            rows.append(json.load(open(os.path.join(RESULTS, fn))))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]),
+                             r["mesh"]))
+    return rows
+
+
+def fraction(r):
+    m = r["roofline"]
+    useful_s = r["model_flops"] / r["n_chips"] / 197e12
+    bound = max(m["compute_s"], m["memory_s"], m["collective_s"])
+    return useful_s / bound if bound else 0.0
+
+
+def render(rows):
+    lines = [
+        "| arch | shape | mesh | mem/dev GiB | compute ms | memory ms | "
+        "collective ms | dominant | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"SKIP: {r['reason'][:50]} | — | — |"
+            )
+            continue
+        m = r["roofline"]
+        mem = ((r["memory"]["argument_bytes"] or 0)
+               + (r["memory"]["temp_bytes"] or 0)) / 2 ** 30
+        ratio = r["model_flops"] / max(m["flops_per_dev"] * r["n_chips"], 1)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {mem:.2f} | "
+            f"{m['compute_s']*1e3:.2f} | {m['memory_s']*1e3:.2f} | "
+            f"{m['collective_s']*1e3:.2f} | {m['dominant']} | "
+            f"{ratio:.2f} | {fraction(r):.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run(quick=True):
+    rows = load()
+    if not rows:
+        print("(no dry-run results yet — run python -m repro.launch.dryrun --all)")
+        return {}
+    table = render(rows)
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        f.write("# Roofline table (from the multi-pod dry-run)\n\n" + table + "\n")
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    print(f"== roofline table: {len(ok)} compiled cells, {len(skipped)} skipped "
+          f"-> {OUT} ==")
+    by_dom = {}
+    for r in ok:
+        by_dom.setdefault(r["roofline"]["dominant"], []).append(r)
+    for dom, rs in sorted(by_dom.items()):
+        print(f"  {dom}-bound: {len(rs)} cells")
+    worst = sorted(ok, key=fraction)[:5]
+    print("  worst roofline fractions:")
+    for r in worst:
+        print(f"   {r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} {fraction(r):.3f}")
+    return {"n_ok": len(ok), "n_skipped": len(skipped)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark driver — one harness per paper figure/claim.
+
+    Fig 2  -> weak_scaling_heat      (3-D heat diffusion, 1 -> 2197 GPUs)
+    Fig 3  -> weak_scaling_twophase  (two-phase flow, 1 -> 1024 GPUs + CUDA-C ref)
+    §2     -> comm_hiding            (@hide_communication on/off)
+    §Roofline -> roofline_table      (aggregates the dry-run cells)
+
+``python -m benchmarks.run`` runs all in quick mode; ``--full`` uses the
+larger measurement sizes.
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", choices=["heat", "twophase", "hide", "roofline"])
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (weak_scaling_heat, weak_scaling_twophase,  # noqa
+                            comm_hiding, roofline_table)
+
+    harnesses = {
+        "heat": weak_scaling_heat,
+        "twophase": weak_scaling_twophase,
+        "hide": comm_hiding,
+        "roofline": roofline_table,
+    }
+    if args.only:
+        harnesses = {args.only: harnesses[args.only]}
+    t0 = time.time()
+    failures = []
+    for name, mod in harnesses.items():
+        print(f"\n########## {name} ##########")
+        try:
+            mod.run(quick=quick)
+        except Exception as e:  # keep going; report at the end
+            failures.append((name, repr(e)))
+            print(f"[bench] {name} FAILED: {e!r}")
+    print(f"\n== benchmarks done in {time.time()-t0:.0f}s; "
+          f"{len(failures)} failures ==")
+    for name, err in failures:
+        print(f"  FAIL {name}: {err}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

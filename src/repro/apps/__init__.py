@@ -1,0 +1,6 @@
+"""The paper's applications: heat diffusion (Fig 1/2), two-phase flow
+(Fig 3), Gross-Pitaevskii (ref [4]) — built on the implicit global grid."""
+
+from . import heat3d, twophase, gross_pitaevskii
+
+__all__ = ["heat3d", "twophase", "gross_pitaevskii"]

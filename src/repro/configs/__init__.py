@@ -1,0 +1,6 @@
+"""Architecture configs (assigned pool + the paper's own solvers)."""
+
+from . import base
+from .base import ModelCfg, MoECfg, SSMCfg, Layer, get, names
+
+__all__ = ["base", "ModelCfg", "MoECfg", "SSMCfg", "Layer", "get", "names"]

@@ -1,0 +1,157 @@
+"""Model/config dataclasses + the architecture registry."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    n_experts: int
+    top_k: int
+    d_ff: int                  # per-expert hidden size
+    n_shared: int = 0          # shared (always-on) experts
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 128
+    head_dim: int = 64         # P
+    expand: int = 2
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 64
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    """One (mixer, ffn) layer of a pattern."""
+
+    mixer: str = "attn"        # attn | swa | mamba | none
+    cross: bool = False        # insert a cross-attention sublayer
+    moe: bool = False          # MoE FFN instead of dense
+    window: int = 0            # sliding-window size for mixer == "swa"
+    causal: bool = True        # False for encoder self-attention
+    ffn: bool = True           # False: mixer-only layer (pure Mamba archs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # ((pattern layers...), repeat) — scanned super-blocks
+    stacks: tuple[tuple[tuple[Layer, ...], int], ...]
+    act: str = "swiglu"        # swiglu | geglu | gelu (dense FFN act)
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    rope_theta: float = 500000.0
+    qk_norm: bool = False
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    logit_softcap: float = 0.0
+    attn_softcap: float = 0.0
+    embed_scale: bool = False  # multiply embeddings by sqrt(d_model)
+    gemma_norm: bool = False   # (1 + w) RMSNorm scale convention
+    # encoder-decoder / multimodal:
+    encoder: Optional["ModelCfg"] = None   # audio/text encoder (enc-dec)
+    cross_source: str = "none"             # none | image | encoder
+    n_cross_tokens: int = 0                # image/frame token count stub
+    frontend: str = "none"                 # none | audio | vision (stub embeds)
+    dtype: str = "bfloat16"
+    # serving
+    max_seq: int = 32768
+    kv_quant: bool = False     # int8 KV cache (per-token-per-head scales)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up so TP sharding always divides (Megatron-style
+        padding; the pad rows are masked out of the loss/logits)."""
+        if not self.vocab:
+            return 0
+        return -(-self.vocab // 512) * 512
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(p) * r for p, r in self.stacks)
+
+    @property
+    def layers_flat(self) -> tuple[Layer, ...]:
+        out: list[Layer] = []
+        for p, r in self.stacks:
+            out.extend(list(p) * r)
+        return tuple(out)
+
+    def param_count(self) -> int:
+        from repro.models import transformer
+        from repro.models import params as pm
+
+        return pm.n_params(transformer.param_specs(self))
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k + shared experts only)."""
+        from repro.models import transformer
+        from repro.models import params as pm
+
+        total = pm.n_params(transformer.param_specs(self))
+        if self.moe is None:
+            return total
+        # subtract inactive expert params
+        n_moe_layers = sum(1 for l in self.layers_flat if l.moe)
+        per_expert = 3 * self.d_model * self.moe.d_ff  # gate+up+down
+        inactive = n_moe_layers * (self.moe.n_experts - self.moe.top_k) * per_expert
+        return total - inactive
+
+
+def scaled(cfg: ModelCfg, **kw) -> ModelCfg:
+    return dataclasses.replace(cfg, **kw)
+
+
+_REGISTRY: dict[str, "ModelCfg"] = {}
+
+
+def register(cfg: ModelCfg) -> ModelCfg:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ModelCfg:
+    if name not in _REGISTRY:
+        # late import of the config modules that register archs
+        from repro import configs  # noqa
+
+        importlib_load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    importlib_load_all()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def importlib_load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+
+    for mod in [
+        "starcoder2_15b", "gemma3_4b", "gemma_2b", "llama3_2_1b",
+        "mamba2_1p3b", "kimi_k2", "granite_moe_3b", "jamba_v01_52b",
+        "llama3_2_vision_90b", "seamless_m4t_v2",
+    ]:
+        importlib.import_module(f"repro.configs.{mod}")
+    _LOADED = True

@@ -1,0 +1,41 @@
+"""llama-3.2-vision-90b [vlm] — 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256, cross-attention image layers.  [hf:meta-llama/*-Vision; unverified]
+
+100 layers = 20 periods of (1 cross-attn layer + 4 self-attn layers),
+matching the every-5th-layer cross-attention of the Llama-3.2 vision
+models.  The vision tower is a frontend STUB: ``input_specs()`` provides
+precomputed image-patch embeddings (B, n_img, d_model).
+
+Pure full attention -> long_500k skipped.
+"""
+
+from .base import Layer, ModelCfg, register
+
+_self = Layer(mixer="attn")
+_cross = Layer(mixer="attn", cross=True)
+
+CFG = register(ModelCfg(
+    name="llama-3.2-vision-90b",
+    d_model=8192,
+    n_heads=64,
+    n_kv=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=128256,
+    stacks=(((_cross, _self, _self, _self, _self), 20),),
+    act="swiglu",
+    rope_theta=5e5,
+    tie_embeddings=False,
+    norm_eps=1e-5,
+    cross_source="image",
+    n_cross_tokens=6404,       # 4 tiles x 1601 patches
+    max_seq=131072,
+))
+
+SMOKE = ModelCfg(
+    name="vision90b-smoke",
+    d_model=64, n_heads=4, n_kv=2, head_dim=16, d_ff=128, vocab=128,
+    stacks=(((Layer(mixer="attn", cross=True), Layer(mixer="attn")), 2),),
+    act="swiglu", tie_embeddings=False,
+    cross_source="image", n_cross_tokens=24, max_seq=64,
+)

@@ -1,0 +1,51 @@
+"""seamless-m4t-large-v2 [audio] — 24L d_model=1024 16H (kv=16, i.e. MHA)
+d_ff=8192 vocab=256206, encoder-decoder, multimodal.  [arXiv:2308.11596; hf]
+
+Encoder: 24 bidirectional self-attention layers over audio-frame
+embeddings (the speech frontend is a STUB — ``input_specs()`` provides
+precomputed frame embeddings).  Decoder: 24 layers of causal self-attn +
+cross-attn to the encoder memory.  Assigned LM shapes are interpreted as
+src_len = tgt_len = seq_len/2.  Enc-dec decode runs (decoder is causal);
+long_500k skipped (full attention, and far beyond the design range).
+"""
+
+from .base import Layer, ModelCfg, register
+
+_ENC = ModelCfg(
+    name="seamless-encoder",
+    d_model=1024, n_heads=16, n_kv=16, head_dim=64, d_ff=8192,
+    vocab=0,                    # takes frame embeddings
+    stacks=(((Layer(mixer="attn", causal=False),), 24),),
+    act="gelu", rope_theta=1e4, frontend="audio",
+)
+
+CFG = register(ModelCfg(
+    name="seamless-m4t-large-v2",
+    d_model=1024,
+    n_heads=16,
+    n_kv=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab=256206,
+    stacks=(((Layer(mixer="attn", cross=True),), 24),),
+    act="gelu",
+    rope_theta=1e4,
+    tie_embeddings=True,
+    encoder=_ENC,
+    cross_source="encoder",
+    max_seq=16384,
+))
+
+_ENC_S = ModelCfg(
+    name="seamless-enc-smoke",
+    d_model=64, n_heads=4, n_kv=4, head_dim=16, d_ff=128, vocab=0,
+    stacks=(((Layer(mixer="attn", causal=False),), 2),),
+    act="gelu", frontend="audio",
+)
+
+SMOKE = ModelCfg(
+    name="seamless-smoke",
+    d_model=64, n_heads=4, n_kv=4, head_dim=16, d_ff=128, vocab=128,
+    stacks=(((Layer(mixer="attn", cross=True),), 2),),
+    act="gelu", encoder=_ENC_S, cross_source="encoder", max_seq=64,
+)

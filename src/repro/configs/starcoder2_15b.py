@@ -1,0 +1,31 @@
+"""starcoder2-15b [dense] — 40L d_model=6144 48H (GQA kv=4) d_ff=24576
+vocab=49152, GQA + RoPE.  [arXiv:2402.19173; hf]
+
+Pure full attention -> long_500k is skipped (see DESIGN.md
+§Arch-applicability); the halo technique does not apply, ring attention is
+available for SP but not required by the assigned shapes.
+"""
+
+from .base import Layer, ModelCfg, register
+
+CFG = register(ModelCfg(
+    name="starcoder2-15b",
+    d_model=6144,
+    n_heads=48,
+    n_kv=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab=49152,
+    stacks=(((Layer(mixer="attn"),), 40),),
+    act="gelu",                  # starcoder2 uses a plain GELU MLP
+    rope_theta=1e5,
+    tie_embeddings=False,
+    norm_eps=1e-5,
+))
+
+SMOKE = ModelCfg(
+    name="starcoder2-smoke",
+    d_model=64, n_heads=4, n_kv=2, head_dim=16, d_ff=256, vocab=128,
+    stacks=(((Layer(mixer="attn"),), 2),),
+    act="gelu", tie_embeddings=False, max_seq=64,
+)

@@ -1,0 +1,26 @@
+"""Core of the reproduction: the implicit global grid (paper's contribution).
+
+Public API mirrors ImplicitGlobalGrid.jl:
+
+* :func:`init_global_grid` / :class:`ImplicitGlobalGrid` — implicit global
+  grid from the device count + Cartesian topology.
+* :func:`update_halo` — halo exchange via ``ppermute`` (local view).
+* :func:`hide_communication` — boundary-first step with overlapped comms.
+"""
+
+from .topology import CartesianTopology, dims_create, make_grid_mesh
+from .halo import update_halo
+from .hide import hide_communication
+from .grid import ImplicitGlobalGrid, init_global_grid
+from . import boundary
+
+__all__ = [
+    "CartesianTopology",
+    "dims_create",
+    "make_grid_mesh",
+    "update_halo",
+    "hide_communication",
+    "ImplicitGlobalGrid",
+    "init_global_grid",
+    "boundary",
+]

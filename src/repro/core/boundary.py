@@ -1,0 +1,35 @@
+"""Physical boundary conditions (local view).
+
+Non-periodic halo updates leave the outermost cells of physical-boundary
+ranks untouched; these helpers set them.  All functions run inside
+``shard_map`` and mask by rank coordinate so inner ranks are unaffected.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .halo import _slc
+from .topology import CartesianTopology
+
+
+def dirichlet(topo: CartesianTopology, A, value, dim: int, width: int = 1):
+    """Set the physical low/high faces along ``dim`` to ``value``."""
+    nd, n = A.ndim, A.shape[dim]
+    lo = jnp.where(topo.is_first(dim), jnp.full_like(A[_slc(nd, dim, 0, width)], value), A[_slc(nd, dim, 0, width)])
+    hi = jnp.where(topo.is_last(dim), jnp.full_like(A[_slc(nd, dim, n - width, n)], value), A[_slc(nd, dim, n - width, n)])
+    A = A.at[_slc(nd, dim, 0, width)].set(lo)
+    A = A.at[_slc(nd, dim, n - width, n)].set(hi)
+    return A
+
+
+def neumann0(topo: CartesianTopology, A, dim: int, width: int = 1):
+    """Zero-flux: copy the first interior cell into the boundary cells."""
+    nd, n = A.ndim, A.shape[dim]
+    lo_src = jnp.broadcast_to(A[_slc(nd, dim, width, width + 1)], A[_slc(nd, dim, 0, width)].shape)
+    hi_src = jnp.broadcast_to(A[_slc(nd, dim, n - width - 1, n - width)], A[_slc(nd, dim, n - width, n)].shape)
+    lo = jnp.where(topo.is_first(dim), lo_src, A[_slc(nd, dim, 0, width)])
+    hi = jnp.where(topo.is_last(dim), hi_src, A[_slc(nd, dim, n - width, n)])
+    A = A.at[_slc(nd, dim, 0, width)].set(lo)
+    A = A.at[_slc(nd, dim, n - width, n)].set(hi)
+    return A

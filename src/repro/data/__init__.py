@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, synthetic_batch, batch_specs
+
+__all__ = ["SyntheticLMData", "synthetic_batch", "batch_specs"]

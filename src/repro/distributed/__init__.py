@@ -1,0 +1,9 @@
+"""Distribution layer: GSPMD sharding rules + shard_map collectives
+(halo sequence parallelism, ring attention, flash-decoding combine,
+context parallelism, GPipe pipelining)."""
+
+from .sharding import AxisRules, axis_rules, default_rules, shd
+from . import context_parallel, pipeline, ring, seqpar
+
+__all__ = ["AxisRules", "axis_rules", "default_rules", "shd",
+           "context_parallel", "pipeline", "ring", "seqpar"]

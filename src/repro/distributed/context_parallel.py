@@ -1,0 +1,52 @@
+"""Context parallelism: the paper's halo technique as a first-class LM feature.
+
+Runs a full model forward with the SEQUENCE sharded over a mesh axis
+(shard_map local view).  Per layer type:
+
+* sliding-window attention -> one kv halo from the left neighbor
+  (`seqpar.seq_sliding_window_attention`) — literally `update_halo!` on
+  the 1-D token grid;
+* full attention            -> ring attention (iterated halo, comm of
+  step i+1 hidden behind compute of step i);
+* Mamba conv                -> k-1 token halo;
+* Mamba SSD states          -> log2(R)-step ppermute doubling scan.
+
+This is how the `long_500k` *prefill* of the sub-quadratic archs runs at
+524288 tokens: 32k tokens per shard on a 16-wide axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tf
+
+
+def context_parallel_logits(params, cfg, tokens, mesh, *, axis: str = "model",
+                            remat: str = "none"):
+    """Teacher-forced logits with sequence sharding over ``axis``.
+
+    tokens: (B, T) with T divisible by the axis size.  Params are
+    replicated across the sequence shards (combine with DP/TP on other
+    axes for production).  Returns (B, T, padded_vocab) logits, sequence-
+    sharded."""
+
+    def local_fn(params, toks):
+        r = jax.lax.axis_index(axis)
+        T_l = toks.shape[1]
+        positions = r * T_l + jnp.arange(T_l)
+        h, _, _ = tf.fwd(params, cfg, toks, mode="train", positions=positions,
+                         seq_axis=axis, remat=remat)
+        return tf.logits_fn(params, cfg, h)
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P(None, axis)),
+        out_specs=P(None, axis, None),
+        check_vma=False,
+    )
+    return jax.jit(fn)(params, tokens)

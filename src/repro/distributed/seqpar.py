@@ -1,0 +1,155 @@
+"""Halo-exchange sequence parallelism — the paper's technique on the token grid.
+
+The sequence dimension is a 1-D "grid" sharded over a mesh axis.  Exactly
+as in the stencil case, operators with *local* receptive fields only need
+a thin halo of neighbor tokens:
+
+* causal depthwise conv (Mamba, k=4)      -> left halo of k-1 tokens
+* sliding-window attention (window W)     -> left halo of W tokens
+* SSD chunk-state recurrence across ranks -> a 1-cell halo on the
+  chunk-state grid, generalized to a log2(R)-step ppermute doubling scan.
+
+All functions run INSIDE ``jax.shard_map`` with the sequence axis sharded
+over ``axis_name``; time/sequence is axis 1 (shape (B, T_local, ...)).
+Communication is neighbor-only ``ppermute`` — identical dataflow to
+``repro.core.halo.update_halo``, so XLA overlaps it with surrounding
+compute exactly as in the stencil solvers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _nranks(axis_name: str) -> int:
+    return jax.lax.axis_size(axis_name)
+
+
+def halo_left(x, width: int, axis_name: str):
+    """Left halo: last ``width`` tokens of the left neighbor (zeros at rank 0).
+
+    x: (B, T_local, ...). Returns (B, width, ...)."""
+    if width > x.shape[1]:
+        raise ValueError(
+            f"halo width {width} > local sequence {x.shape[1]}; "
+            "increase the shard size or use ring attention"
+        )
+    n = _nranks(axis_name)
+    send = x[:, -width:]
+    perm = [(i, i + 1) for i in range(n - 1)]  # rank i -> i+1; rank 0 receives zeros
+    return jax.lax.ppermute(send, axis_name, perm)
+
+
+def seq_conv1d_causal(x, w, axis_name: str | None = None):
+    """Causal depthwise conv over a (possibly sequence-sharded) stream.
+
+    x: (B, T, C); w: (K, C).  With ``axis_name`` the K-1 left context comes
+    from the neighbor shard — the paper's halo update on the token grid."""
+    K = w.shape[0]
+    if axis_name is None:
+        pad = jnp.zeros_like(x[:, : K - 1])
+    else:
+        pad = halo_left(x, K - 1, axis_name)
+    xx = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + xx[:, k : k + x.shape[1]] * w[K - 1 - k][None, None, :]
+    return out
+
+
+def seq_sliding_window_attention(q, k, v, *, window: int, axis_name: str,
+                                 scale: float | None = None):
+    """Sequence-parallel causal sliding-window attention via a kv halo.
+
+    q: (B, H, T_local, D); k/v: (B, Hkv, T_local, D), all sharded on the
+    sequence axis.  Requires window <= T_local (single-hop halo; the
+    assigned shapes satisfy this: 500k/16 shards = 32k >> 1k windows)."""
+    B, H, T, D = q.shape
+    if window > T:
+        raise ValueError("window spans more than one neighbor shard; chain halos")
+    # halo_left wants (B, T, ...): move heads behind time
+    kh = halo_left(k.swapaxes(1, 2), window, axis_name).swapaxes(1, 2)
+    vh = halo_left(v.swapaxes(1, 2), window, axis_name).swapaxes(1, 2)
+    kk = jnp.concatenate([kh, k], axis=2)
+    vv = jnp.concatenate([vh, v], axis=2)
+    # Rank 0's halo is zeros; mask it off via absolute positions.
+    r = jax.lax.axis_index(axis_name)
+    q_abs = r * T + jnp.arange(T)
+    kv_abs = r * T - window + jnp.arange(T + window)
+    logits_scale = (D ** -0.5) if scale is None else scale
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, T, D)
+    logits = jnp.einsum("bkgtd,bksd->bkgts", qg * logits_scale, kk).astype(jnp.float32)
+    mask = (
+        (kv_abs[None, :] <= q_abs[:, None])
+        & (kv_abs[None, :] > q_abs[:, None] - window)
+        & (kv_abs[None, :] >= 0)
+    )
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bksd->bkgtd", p.astype(q.dtype), vv)
+    return out.reshape(B, H, T, D)
+
+
+def _seg_combine(earlier, later):
+    """Compose SSD segments: apply ``earlier`` then ``later`` to a state.
+
+    Segment (P, S): h -> P * h + S  (P broadcasts over the state dims)."""
+    P1, S1 = earlier
+    P2, S2 = later
+    return (P1 * P2, P2[..., None, None] * S1 + S2)
+
+
+def rank_prefix_scan(Ptot, h_local, axis_name: str):
+    """Exclusive associative scan of (decay, state) segments across ranks.
+
+    Ptot: (Ba, H) total segment decay; h_local: (Ba, H, N, P) segment state
+    (fp32).  Returns h_in, the state entering this rank — the chunk-state
+    "halo" generalized to log2(R) ppermute steps (Hillis–Steele doubling).
+    """
+    n = _nranks(axis_name)
+    r = jax.lax.axis_index(axis_name)
+    # shift right: acc[r] = seg[r-1], identity at rank 0
+    perm1 = [(i, i + 1) for i in range(n - 1)]
+    accP = jax.lax.ppermute(Ptot, axis_name, perm1)
+    accS = jax.lax.ppermute(h_local, axis_name, perm1)  # zeros at rank 0 = identity
+    accP = jnp.where(r == 0, jnp.ones_like(accP), accP)
+    # inclusive doubling scan => acc[r] = seg[0] ∘ ... ∘ seg[r-1]
+    shift = 1
+    while shift < n:
+        permk = [(i, i + shift) for i in range(n - shift)]
+        inP = jax.lax.ppermute(accP, axis_name, permk)
+        inS = jax.lax.ppermute(accS, axis_name, permk)
+        take = r >= shift
+        inP = jnp.where(take, inP, jnp.ones_like(inP))
+        inS = jnp.where(take, inS, jnp.zeros_like(inS))
+        accP, accS = _seg_combine((inP, inS), (accP, accS))
+        shift *= 2
+    return accS, accP  # h_in (for h0 = 0) and combined decay (for h0 != 0)
+
+
+def seq_ssd_scan(x, dt, A, B, C, *, chunk: int, axis_name: str, use_kernel="ref"):
+    """Sequence-parallel SSD scan.
+
+    Shapes as in ``repro.kernels.ssd.ssd_scan`` with T = T_local.  Returns
+    (y, h_out) where h_out is this rank's outgoing state (the global final
+    state lives on the last rank)."""
+    from repro.kernels.ssd import ssd_scan
+
+    y_local, h_local = ssd_scan(x, dt, A, B, C, chunk=chunk, use_kernel=use_kernel)
+    logdA_t = dt.astype(jnp.float32) * A.astype(jnp.float32)[None, None, :]
+    Ptot = jnp.exp(logdA_t.sum(axis=1))  # (Ba, H)
+
+    h_in, _ = rank_prefix_scan(Ptot, h_local.astype(jnp.float32), axis_name)
+
+    # correction: y_t += exp(s_t) * C_t^T h_in
+    s = jnp.cumsum(logdA_t, axis=1)  # (Ba, T, H)
+    H = x.shape[2]
+    G = B.shape[2]
+    Ch = jnp.repeat(C, H // G, axis=2)  # (Ba, T, H, N)
+    y_corr = jnp.einsum("bth,bthn,bhnp->bthp", jnp.exp(s), Ch.astype(jnp.float32), h_in)
+    y = y_local + y_corr.astype(y_local.dtype)
+    h_out = Ptot[..., None, None] * h_in + h_local.astype(jnp.float32)
+    return y, h_out.astype(h_local.dtype)

@@ -1,0 +1,138 @@
+"""Logical-axis sharding rules (GSPMD) for the LM zoo.
+
+Model code annotates tensors with *logical* axis names via :func:`shd`;
+a rule set maps logical names to mesh axes (MaxText-style).  With no rule
+set installed (single-device smoke tests), :func:`shd` is a no-op, so the
+same model code runs everywhere.
+
+Default rule set for the production meshes ``(data, model)`` /
+``(pod, data, model)``:
+
+    batch      -> (pod, data)      DP across pods and the data axis
+    fsdp       -> data             FSDP: weights sharded over the data axis
+    embed_and_logits vocab -> model  (TP of the LM head)
+    heads/ffn/experts -> model     Megatron-style TP / expert parallelism
+    cache_seq  -> model (+data when batch < data axis)  flash-decoding split
+    seq_sp     -> model            sequence parallelism (halo / ring layers)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current():
+    return getattr(_state, "rules", None)
+
+
+class AxisRules:
+    """Mapping logical axis name -> mesh axis (str | tuple | None)."""
+
+    def __init__(self, mesh: Mesh, rules: dict[str, object]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def spec(self, *logical: str | None, shape: Sequence[int] | None = None) -> P:
+        """PartitionSpec for the logical axes.
+
+        Two-pass: single-axis rules (TP dims like heads/ffn/vocab) reserve
+        their mesh axis first, then multi-axis rules (fsdp/batch) take what
+        remains — so ZeRO-over-model never steals the TP axis.  With
+        ``shape``, mesh axes that do not evenly divide a dimension are
+        dropped (longest divisible prefix kept)."""
+        resolved: list = [None] * len(logical)
+        used: set = set()
+
+        def fit(axes, dim):
+            axes = tuple(a for a in axes if a not in used and a in self.mesh.axis_names)
+            if dim is not None:
+                kept, prod = [], 1
+                for a in axes:
+                    if dim % (prod * self.mesh.shape[a]) == 0:
+                        kept.append(a)
+                        prod *= self.mesh.shape[a]
+                    else:
+                        break
+                axes = tuple(kept)
+            return axes
+
+        order = sorted(
+            range(len(logical)),
+            key=lambda i: isinstance(self.rules.get(logical[i] or ""), (tuple, list)),
+        )
+        for i in order:
+            name = logical[i]
+            axes = self.rules.get(name) if name else None
+            if axes is None:
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            axes = fit(axes, shape[i] if shape is not None else None)
+            used.update(axes)
+            if len(axes) == 1:
+                resolved[i] = axes[0]
+            elif axes:
+                resolved[i] = tuple(axes)
+        return P(*resolved)
+
+    def sharding(self, *logical: str | None, shape: Sequence[int] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical, shape=shape))
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules | None):
+    prev = _current()
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shd(x, *logical: str | None):
+    """Annotate ``x`` with logical axes (no-op without installed rules)."""
+    rules = _current()
+    if rules is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} != {len(logical)} logical axes {logical}")
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(*logical, shape=x.shape)
+    )
+
+
+def default_rules(mesh: Mesh, *, batch_size: int | None = None,
+                  seq_parallel: bool = False) -> AxisRules:
+    """Production rule set; adapts cache sharding to small-batch decode."""
+    has_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    data_size = mesh.shape["data"] * (mesh.shape["pod"] if has_pod else 1)
+    small_batch = batch_size is not None and batch_size < data_size
+    rules = {
+        "batch": batch_axes,
+        # ZeRO-3 + TP hybrid: params/grads/opt-state shard over the model
+        # axis too wherever the param has no TP-sharded dim (the axis-reuse
+        # filter in spec() drops "model" automatically when TP already uses
+        # it on another dim)
+        "fsdp": (*batch_axes, "model"),
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": None,          # kv heads rarely divide the model axis
+        "ffn": "model",
+        "experts": "model",
+        "embed": None,
+        "seq": "model" if seq_parallel else None,
+        # flash-decoding: shard the KV-cache length; fold the (idle) data
+        # axes in when the batch can't fill them (e.g. long_500k, batch 1).
+        "cache_seq": (*batch_axes, "model") if small_batch else ("model",),
+        "cache_batch": None if small_batch else batch_axes,
+        "state_heads": "model",
+    }
+    return AxisRules(mesh, rules)

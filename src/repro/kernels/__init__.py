@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel subpackage provides:
+
+* ``kernel.py`` — ``pl.pallas_call`` body with explicit BlockSpec VMEM tiling,
+* ``ops.py``    — jitted public wrapper (dispatches kernel vs. reference),
+* ``ref.py``    — pure-``jnp`` oracle used by the allclose tests.
+
+Kernels target TPU (MXU/VPU, HBM→VMEM tiling); on CPU they are validated in
+``interpret=True`` mode.
+"""

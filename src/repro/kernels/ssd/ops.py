@@ -1,0 +1,34 @@
+"""Public SSD op: kernel on TPU, chunked jnp elsewhere."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_pallas
+from .ref import ssd_chunked_ref, ssd_decode_step, ssd_ref
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, use_kernel: str = "auto", h0=None):
+    """Selective-SSM scan (Mamba-2 SSD). See ``ref.ssd_ref`` for the contract.
+
+    B/C are grouped: (Ba, T, G, N); the kernel path broadcasts to per-head."""
+    T = x.shape[1]
+    if T % chunk:  # largest divisor of T not exceeding the requested chunk
+        chunk = max(c for c in range(1, min(chunk, T) + 1) if T % c == 0)
+    if use_kernel == "auto":
+        use_kernel = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use_kernel == "ref":
+        return ssd_chunked_ref(x, dt, A, B, C, chunk=chunk, h0=h0)
+    if use_kernel == "naive":
+        return ssd_ref(x, dt, A, B, C, h0=h0)
+    H = x.shape[2]
+    G = B.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    interpret = use_kernel == "interpret"
+    return ssd_pallas(x, dt, A, Bh, Ch, chunk=chunk, interpret=interpret, h0=h0)
+
+
+__all__ = ["ssd_scan", "ssd_decode_step"]

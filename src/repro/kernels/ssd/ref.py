@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space duality) layer.
+
+Selective state-space recurrence (per batch b, head h):
+
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T      h: (N, P)
+    y_t = C_t^T h_t                                          y: (P,)
+
+``ssd_ref`` is the naive sequential scan (the correctness oracle);
+``ssd_chunked_ref`` is the chunk-parallel SSD form (matmul-rich — the
+production jnp path) which must match the naive scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, h0=None):
+    """Naive scan.
+
+    x: (Ba, T, H, P); dt: (Ba, T, H); A: (H,) (negative);
+    B, C: (Ba, T, G, N) with H % G == 0; h0: (Ba, H, N, P) or None.
+    Returns y: (Ba, T, H, P), h_final: (Ba, H, N, P).
+    """
+    Ba, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)  # (Ba, T, H, N)
+    Ch = jnp.repeat(C, rep, axis=2)
+    dA = jnp.exp(dt * A[None, None, :])  # (Ba, T, H)
+
+    def step(h, inp):
+        dA_t, dt_t, B_t, C_t, x_t = inp
+        # h: (Ba, H, N, P)
+        h = h * dA_t[..., None, None] + (
+            (dt_t[..., None] * B_t)[..., :, None] * x_t[..., None, :]
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, h)
+        return h, y
+
+    if h0 is None:  # vma-correct zeros (see ssd_chunked_ref)
+        h0 = jnp.broadcast_to((x[:, 0, :, 0] * 0)[..., None, None], (Ba, H, N, P)).astype(x.dtype)
+    h = h0
+    inputs = (
+        jnp.moveaxis(dA, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bh, 1, 0),
+        jnp.moveaxis(Ch, 1, 0),
+        jnp.moveaxis(x, 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h, inputs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def _segsum(logdA):
+    """s[..., t] inclusive cumsum along time (last axis)."""
+    return jnp.cumsum(logdA, axis=-1)
+
+
+def ssd_chunked_ref(x, dt, A, B, C, chunk: int = 16, h0=None):
+    """Chunk-parallel SSD (Mamba-2 Alg. 1 as dense matmuls). Same contract as ssd_ref."""
+    Ba, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    if T % chunk:
+        raise ValueError(f"T={T} must be divisible by chunk={chunk}")
+    nc = T // chunk
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    # reshape to chunks: (Ba, nc, L, H, ...)
+    L = chunk
+    xc = x.reshape(Ba, nc, L, H, P)
+    dtc = dt.reshape(Ba, nc, L, H)
+    Bc = Bh.reshape(Ba, nc, L, H, N)
+    Cc = Ch.reshape(Ba, nc, L, H, N)
+    logdA = dtc * A[None, None, None, :]  # (Ba, nc, L, H)
+    s = jnp.cumsum(logdA, axis=2)  # inclusive
+
+    # intra-chunk: Y_diag[t] = sum_{j<=t} exp(s_t - s_j) (C_t . B_j) dt_j x_j
+    decay = jnp.exp(s[:, :, :, None, :] - s[:, :, None, :, :])  # (Ba,nc,L_t,L_j,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    scores = jnp.einsum("bclhn,bcjhn->bcljh", Cc, Bc)  # (Ba,nc,L_t,L_j,H)
+    w = scores * decay * dtc[:, :, None, :, :]
+    y_diag = jnp.einsum("bcljh,bcjhp->bclhp", w, xc)
+
+    # chunk state contribution: sum_j exp(s_L - s_j) dt_j B_j x_j^T
+    dec_end = jnp.exp(s[:, :, -1:, :] - s)  # (Ba,nc,L,H)
+    states = jnp.einsum(
+        "bclh,bclhn,bclhp->bchnp", dec_end * dtc, Bc, xc
+    )  # (Ba,nc,H,N,P)
+    dA_chunk = jnp.exp(s[:, :, -1, :])  # (Ba, nc, H)
+
+    # inter-chunk recurrence over chunk states
+    def step(h, inp):
+        dAc, st = inp  # (Ba,H), (Ba,H,N,P)
+        h_new = h * dAc[..., None, None] + st
+        return h_new, h  # emit h BEFORE this chunk
+
+    if h0 is None:
+        # build zeros from the inputs so the carry inherits their vma type
+        # (required when running inside shard_map, e.g. sequence parallelism)
+        h0 = jnp.broadcast_to((x[:, 0, :, 0] * 0)[..., None, None], (Ba, H, N, P))
+    # the inter-chunk recurrence runs in fp32 regardless of the model dtype
+    h_fin, h_prevs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(dA_chunk, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(states, 1, 0).astype(jnp.float32)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (Ba, nc, H, N, P) state before chunk
+
+    # inter-chunk output: Y_off[t] = exp(s_t) C_t^T h_prev
+    y_off = jnp.einsum(
+        "bclh,bclhn,bchnp->bclhp", jnp.exp(s), Cc, h_prevs
+    )
+    y = (y_diag + y_off).reshape(Ba, T, H, P)
+    return y.astype(x.dtype), h_fin.astype(x.dtype)
+
+
+def ssd_decode_step(h, x_t, dt_t, A, B_t, C_t):
+    """Single-token recurrent step for serving.
+
+    h: (Ba, H, N, P); x_t: (Ba, H, P); dt_t: (Ba, H); B_t/C_t: (Ba, G, N).
+    Returns (y_t: (Ba, H, P), h_new)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    dA = jnp.exp(dt_t * A[None, :])
+    h = h * dA[..., None, None] + (dt_t[..., None] * Bh)[..., :, None] * x_t[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+    return y, h

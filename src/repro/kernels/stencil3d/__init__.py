@@ -1,0 +1,4 @@
+from .ops import heat_step
+from .ref import heat_step_ref
+
+__all__ = ["heat_step", "heat_step_ref"]

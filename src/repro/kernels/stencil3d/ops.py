@@ -1,0 +1,28 @@
+"""Public wrapper for the heat-diffusion stencil step.
+
+Dispatches to the Pallas TPU kernel on TPU backends (or in ``interpret``
+mode when forced) and to the pure-jnp reference elsewhere.  Both paths are
+drop-in replacements for the ``step!`` in the paper's Fig. 1 and obey the
+pass-through ring convention, so they compose with ``update_halo`` and
+``hide_communication`` unchanged.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import heat_step_pallas
+from .ref import heat_step_ref
+
+
+def heat_step(T, Ci, lam, dt, dx, dy, dz, *, use_kernel: str = "auto", bx: int = 8):
+    """One stencil step. ``use_kernel``: 'auto' | 'pallas' | 'interpret' | 'ref'."""
+    if use_kernel == "auto":
+        use_kernel = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use_kernel == "ref":
+        return heat_step_ref(T, Ci, lam, dt, dx, dy, dz)
+    if use_kernel == "pallas":
+        return heat_step_pallas(T, Ci, lam, dt, dx, dy, dz, bx=bx, interpret=False)
+    if use_kernel == "interpret":
+        return heat_step_pallas(T, Ci, lam, dt, dx, dy, dz, bx=bx, interpret=True)
+    raise ValueError(f"unknown use_kernel={use_kernel!r}")

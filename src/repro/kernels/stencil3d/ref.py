@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the 3-D heat-diffusion stencil step (paper Fig. 1).
+
+    T2[inn] = T[inn] + dt * lam * Ci[inn] * (d2_xi(T)/dx^2
+                                             + d2_yi(T)/dy^2
+                                             + d2_zi(T)/dz^2)
+
+The outer ring passes through (physical boundary / halo cells are owned by
+``update_halo`` / boundary conditions, not by the stencil).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def heat_step_ref(T, Ci, lam, dt, dx, dy, dz):
+    c = T[1:-1, 1:-1, 1:-1]
+    d2x = (T[2:, 1:-1, 1:-1] - 2.0 * c + T[:-2, 1:-1, 1:-1]) / (dx * dx)
+    d2y = (T[1:-1, 2:, 1:-1] - 2.0 * c + T[1:-1, :-2, 1:-1]) / (dy * dy)
+    d2z = (T[1:-1, 1:-1, 2:] - 2.0 * c + T[1:-1, 1:-1, :-2]) / (dz * dz)
+    Tn = c + dt * (lam * Ci[1:-1, 1:-1, 1:-1] * (d2x + d2y + d2z))
+    return T.at[1:-1, 1:-1, 1:-1].set(Tn.astype(T.dtype))

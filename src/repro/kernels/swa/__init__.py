@@ -1,0 +1,4 @@
+from .ops import sliding_window_attention
+from .ref import swa_ref
+
+__all__ = ["sliding_window_attention", "swa_ref"]

@@ -1,0 +1,23 @@
+"""Public sliding-window attention op (kernel on TPU, oracle elsewhere)."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import swa_pallas
+from .ref import swa_ref
+
+
+def sliding_window_attention(
+    q, k, v, *, window: int, scale: float | None = None,
+    use_kernel: str = "auto", bq: int = 128, bk: int = 128,
+):
+    """Causal sliding-window GQA attention; see ``ref.swa_ref`` for semantics."""
+    if use_kernel == "auto":
+        use_kernel = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use_kernel == "ref":
+        return swa_ref(q, k, v, window=window, scale=scale)
+    interpret = use_kernel == "interpret"
+    return swa_pallas(
+        q, k, v, window=window, scale=scale, bq=bq, bk=bk, interpret=interpret
+    )

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: causal sliding-window (GQA) attention.
+
+Position ``i`` attends to positions ``j`` with ``i - W < j <= i`` (window
+``W``; ``W >= S`` degenerates to plain causal attention).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def swa_ref(q, k, v, *, window: int, scale: float | None = None):
+    """q: (B, H, T, D); k/v: (B, Hkv, S, D) with H % Hkv == 0. Returns (B, H, T, D).
+
+    Assumes queries are the LAST ``T`` positions of the ``S``-long kv
+    sequence (T == S for self-attention prefill)."""
+    B, H, T, D = q.shape
+    Bk, Hkv, S, _ = k.shape
+    assert H % Hkv == 0
+    g = H // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q * scale, kr).astype(jnp.float32)
+    qpos = jnp.arange(T)[:, None] + (S - T)
+    kpos = jnp.arange(S)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", p.astype(q.dtype), vr)

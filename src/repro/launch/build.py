@@ -1,0 +1,157 @@
+"""Build (step_fn, input specs, shardings) for one dry-run cell.
+
+No device memory is allocated: every input is a ShapeDtypeStruct and the
+cell is only ``jit(...).lower(...).compile()``-ed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import base as cb
+from repro.data.pipeline import batch_logical_axes, batch_specs
+from repro.distributed.sharding import axis_rules, default_rules
+from repro.models import params as pm
+from repro.models import transformer as tf
+from repro.train import TrainCfg, make_train_step
+
+from .cells import SHAPES, TRAIN_RECIPES
+
+
+def _prep_cfg(name: str, shape: dict):
+    cfg = cb.get(name)
+    if cfg.encoder is not None:
+        # enc-dec: src_len = tgt_len = seq/2; cross memory sized to src_len
+        cfg = dataclasses.replace(cfg, n_cross_tokens=shape["seq"] // 2)
+    return cfg
+
+
+def _enc_dec(cfg) -> bool:
+    return cfg.encoder is not None
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, overrides: dict | None = None):
+    """Returns (fn, args_specs: tuple, in_shardings, out_shardings, donate, meta)."""
+    shape = SHAPES[shape_name]
+    cfg = _prep_cfg(arch, shape)
+    if (overrides or {}).get("kv_quant"):
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    kind0 = shape["kind"]
+    rules = default_rules(mesh, batch_size=shape["batch"],
+                          seq_parallel=(kind0 != "decode"))
+    pdtype = jnp.bfloat16
+    pspecs = tf.param_specs(cfg)
+    p_shapes = pm.shapes(pspecs, pdtype)
+    p_shard = pm.shardings(pspecs, rules)
+    kind = shape["kind"]
+    overrides = overrides or {}
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "n_params": pm.n_params(pspecs),
+        "n_active_params": cfg.active_param_count(),
+    }
+
+    if kind == "train":
+        recipe = dict(TRAIN_RECIPES[arch])
+        recipe.update(overrides)
+        seq = shape["seq"] // 2 if _enc_dec(cfg) else shape["seq"]
+        # microbatch must still fill the batch shards, or every device
+        # redundantly computes the whole microbatch (measured: 7x compute
+        # inflation on the 2x16x16 kimi cell before this cap)
+        batch_shards = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.axis_names:
+                batch_shards *= mesh.shape[ax]
+        max_accum = max(1, shape["batch"] // batch_shards)
+        while max_accum > 1 and shape["batch"] % (max_accum * batch_shards):
+            max_accum -= 1
+        recipe["grad_accum"] = min(recipe["grad_accum"], max_accum)
+        tcfg = TrainCfg(
+            opt=optim.AdamWCfg(moments=recipe["moments"]),
+            grad_accum=recipe["grad_accum"],
+            remat=recipe["remat"],
+        )
+        opt_specs = optim.state_specs(pspecs, tcfg.opt)
+        opt_shard = optim.state_shardings(pspecs, tcfg.opt, rules)
+        b_specs = batch_specs(cfg, shape["batch"], seq)
+        b_axes = batch_logical_axes(cfg)
+        b_shard = {k: rules.sharding(*b_axes[k], shape=b_specs[k].shape) for k in b_specs}
+        step = make_train_step(cfg, tcfg)
+
+        def fn(params, opt_state, batch):
+            with axis_rules(rules):
+                return step(params, opt_state, batch)
+
+        meta.update(recipe=recipe, tokens=shape["batch"] * seq)
+        return (
+            fn,
+            (p_shapes, opt_specs, b_specs),
+            (p_shard, opt_shard, b_shard),
+            (p_shard, opt_shard, None),
+            (0, 1),
+            meta,
+        )
+
+    if kind == "prefill":
+        seq = shape["seq"] // 2 if _enc_dec(cfg) else shape["seq"]
+        b_specs = batch_specs(cfg, shape["batch"], seq)
+        b_specs.pop("labels")
+        b_axes = batch_logical_axes(cfg)
+        b_shard = {k: rules.sharding(*b_axes[k], shape=b_specs[k].shape) for k in b_specs}
+        c_shard = tf.cache_shardings(cfg, rules, shape["batch"], seq, pdtype)
+
+        def fn(params, batch):
+            with axis_rules(rules):
+                cross = tf.encode_cross_states(params, cfg, batch)
+                logits, caches = tf.prefill(
+                    params, cfg, batch["tokens"], cross_states=cross, remat="full"
+                )
+                return logits, caches
+
+        meta.update(tokens=shape["batch"] * seq)
+        return (
+            fn,
+            (p_shapes, b_specs),
+            (p_shard, b_shard),
+            (None, c_shard),
+            (),
+            meta,
+        )
+
+    if kind == "decode":
+        B, S = shape["batch"], shape["seq"]
+        tgt_S = S // 2 if _enc_dec(cfg) else S
+        caches = tf.cache_specs(cfg, B, tgt_S, dtype=pdtype)
+        c_shard = tf.cache_shardings(cfg, rules, B, tgt_S, pdtype)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def fn(params, token, pos, caches):
+            with axis_rules(rules):
+                return tf.decode_step(params, cfg, token, pos, caches)
+
+        meta.update(tokens=B)
+        return (
+            fn,
+            (p_shapes, tok, pos, caches),
+            (p_shard, rules.sharding("batch", None, shape=(B, 1)), rules.sharding(), c_shard),
+            (None, c_shard),
+            (3,),
+            meta,
+        )
+
+    raise ValueError(kind)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, **kw):
+    fn, args, in_sh, out_sh, donate, meta = build_cell(arch, shape_name, mesh, **kw)
+    jfn = jax.jit(
+        fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+    )
+    lowered = jfn.lower(*args)
+    return lowered, meta

@@ -1,0 +1,72 @@
+"""The 40 (architecture x input-shape) dry-run cells.
+
+Each cell = (arch, shape) with a training/serving *recipe* (grad-accum,
+optimizer-moment dtype, remat policy) chosen from napkin memory math so
+the per-device footprint targets 16 GB v5e HBM — the recipes are recorded
+in EXPERIMENTS.md alongside the measured ``memory_analysis()``.
+
+Shape semantics (per the assignment):
+  train_4k     train_step,  seq 4096,   global batch 256
+  prefill_32k  prefill,     seq 32768,  global batch 32
+  decode_32k   serve_step,  1 new token, KV len 32768, global batch 128
+  long_500k    serve_step,  1 new token, KV len 524288, global batch 1
+               (sub-quadratic archs only; full-attention archs SKIP)
+
+Enc-dec (seamless): seq splits into src_len = tgt_len = seq/2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+ARCHS = [
+    "starcoder2-15b", "gemma3-4b", "gemma-2b", "llama3.2-1b", "mamba2-1.3b",
+    "kimi-k2-1t-a32b", "granite-moe-3b-a800m", "jamba-v0.1-52b",
+    "llama-3.2-vision-90b", "seamless-m4t-large-v2",
+]
+
+# Sub-quadratic archs that run long_500k (SSM / hybrid / sliding-window-dominant)
+LONG_OK = {"mamba2-1.3b", "jamba-v0.1-52b", "gemma3-4b"}
+
+# Per-arch training recipe: (grad_accum over the per-device batch,
+# optimizer moment storage, remat policy).  Derivation in EXPERIMENTS.md.
+TRAIN_RECIPES = {
+    # params B  | bytes/param budget     | microbatch tokens/dev
+    "starcoder2-15b":        dict(grad_accum=4, moments="float32", remat="full"),
+    "gemma3-4b":             dict(grad_accum=2, moments="float32", remat="full"),
+    "gemma-2b":              dict(grad_accum=1, moments="float32", remat="full"),
+    "llama3.2-1b":           dict(grad_accum=2, moments="float32", remat="full"),
+    "mamba2-1.3b":           dict(grad_accum=1, moments="float32", remat="full"),
+    "kimi-k2-1t-a32b":       dict(grad_accum=16, moments="int8", remat="full"),
+    "granite-moe-3b-a800m":  dict(grad_accum=1, moments="float32", remat="full"),
+    "jamba-v0.1-52b":        dict(grad_accum=8, moments="bfloat16", remat="full"),
+    "llama-3.2-vision-90b":  dict(grad_accum=16, moments="bfloat16", remat="full"),
+    "seamless-m4t-large-v2": dict(grad_accum=2, moments="float32", remat="full"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def skipped(self) -> str | None:
+        if self.shape == "long_500k" and self.arch not in LONG_OK:
+            return "pure full attention at 500k context (see DESIGN.md §Arch-applicability)"
+        return None
+
+
+def all_cells() -> list[Cell]:
+    return [Cell(a, s) for a in ARCHS for s in SHAPES]
+
+
+def runnable_cells() -> list[Cell]:
+    return [c for c in all_cells() if c.skipped is None]

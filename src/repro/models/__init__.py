@@ -1,0 +1,5 @@
+"""LM model zoo: composable transformer/SSM/MoE/enc-dec/VLM blocks."""
+
+from . import attention, blocks, layers, moe, params, ssm, transformer
+
+__all__ = ["attention", "blocks", "layers", "moe", "params", "ssm", "transformer"]

@@ -1,0 +1,318 @@
+"""GQA attention: full/sliding-window, train/prefill/decode, TP-aware.
+
+Layout notes (TP): q/o projections are sharded over flat heads (H divides
+the model axis for every assigned arch); kv heads (4–16) usually do NOT
+divide the model axis, so k/v are computed replicated and expanded to H
+via a static gather — per-device the expanded kv slice is S * H_local * D,
+i.e. the same bytes as a 1/TP shard of MHA kv.  The KV *cache* is instead
+sharded along its length (flash-decoding; combined with LSE all-reduce),
+which works for any kv-head count and any batch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shd
+from .layers import rms_norm, rope, softcap
+from .params import ParamSpec
+
+
+def specs(cfg, layer) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    out = {
+        "wq": ParamSpec((d, H, Dh), ("fsdp", "heads", None)),
+        "wk": ParamSpec((d, Hkv, Dh), ("fsdp", "kv_heads", None)),
+        "wv": ParamSpec((d, Hkv, Dh), ("fsdp", "kv_heads", None)),
+        "wo": ParamSpec((H, Dh, d), ("heads", None, "fsdp")),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamSpec((Dh,), (None,), "ones")
+        out["k_norm"] = ParamSpec((Dh,), (None,), "ones")
+    return out
+
+
+def _kv_quantize(kv):
+    """Per (token, head) int8 quantization over head_dim.
+
+    kv: (B, S, Hkv, Dh) -> (int8 kv, f32 scale (B, S, Hkv)).  Halves the
+    decode-step HBM traffic (the KV cache read dominates long-context
+    decode) at <1% attention output error — see tests."""
+    s = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.where(s == 0.0, 1.0, s)
+    q = jnp.round(kv.astype(jnp.float32) / s[..., None]).astype(jnp.int8)
+    return q, s
+
+
+def _kv_dequantize(q, s, dtype):
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def _expand_kv(kv, H):
+    """(B, S, Hkv, D) -> (B, S, H, D) by repeating each kv head g times."""
+    Hkv = kv.shape[2]
+    idx = jnp.arange(H) // (H // Hkv)
+    return jnp.take(kv, idx, axis=2)
+
+
+import os
+
+_Q_CHUNK = int(os.environ.get("REPRO_Q_CHUNK", "512"))
+
+
+def _attend(q, kh, vh, mask, *, attn_softcap=0.0, q_chunk=_Q_CHUNK):
+    """q: (B,T,H,D); kh/vh: (B,S,H,D); mask: (T,S) or (B,T,S) bool."""
+    B, T, H, D = q.shape
+    scale = D ** -0.5
+
+    def block(qb, mb):
+        logits = jnp.einsum("bthd,bshd->bhts", qb * scale, kh).astype(jnp.float32)
+        if attn_softcap:
+            logits = softcap(logits, attn_softcap)
+        mb_ = mb if mb.ndim == 3 else mb[None]
+        logits = jnp.where(mb_[:, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhts,bshd->bthd", p, vh)
+
+    if T <= q_chunk or T % q_chunk:
+        return block(q, mask)
+    nc = T // q_chunk
+    qs = q.reshape(B, nc, q_chunk, H, D).swapaxes(0, 1)
+    ms = (
+        mask.reshape(nc, q_chunk, mask.shape[-1])
+        if mask.ndim == 2
+        else mask.reshape(B, nc, q_chunk, mask.shape[-1]).swapaxes(0, 1)
+    )
+    # remat the chunk body: the map VJP otherwise saves the STACKED fp32
+    # probabilities (full B,H,T,S) — recompute per chunk instead
+    outs = jax.lax.map(jax.checkpoint(lambda xs: block(*xs)), (qs, ms))
+    return outs.swapaxes(0, 1).reshape(B, T, H, D)
+
+
+def _attend_swa(q, kh, vh, *, window, positions, q_chunk=_Q_CHUNK,
+                attn_softcap=0.0):
+    """Block-local sliding-window attention (XLA path).
+
+    Each q chunk only reads the ``window-1+chunk`` kv columns that can
+    intersect its window — FLOPs and bytes scale with T*W, not T*S (the
+    paper's local-receptive-field insight; the Pallas kernel does the same
+    with BlockSpec index maps).  q: (B,T,H,D); kh/vh: (B,S,H,D); causal.
+    """
+    B, T, H, D = q.shape
+    S = kh.shape[1]
+    c = min(q_chunk, T)
+    if T % c:
+        c = T
+    cols = min(S, window - 1 + c)
+    scale = D ** -0.5
+    nc = T // c
+
+    def block(i):
+        qb = jax.lax.dynamic_slice_in_dim(q, i * c, c, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(positions, i * c, c)
+        start = jnp.clip(qpos[0] - (window - 1), 0, S - cols)
+        kb = jax.lax.dynamic_slice_in_dim(kh, start, cols, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vh, start, cols, axis=1)
+        kvpos = start + jnp.arange(cols)
+        mask = (kvpos[None, :] <= qpos[:, None]) & (
+            kvpos[None, :] > qpos[:, None] - window
+        )
+        logits = jnp.einsum("bthd,bshd->bhts", qb * scale, kb).astype(jnp.float32)
+        if attn_softcap:
+            logits = softcap(logits, attn_softcap)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhts,bshd->bthd", p, vb)
+
+    if nc == 1:
+        return block(0)
+    outs = jax.lax.map(jax.checkpoint(block), jnp.arange(nc))
+    return outs.swapaxes(0, 1).reshape(B, T, H, D)
+
+
+def fwd(params, cfg, layer, x, *, mode, positions, cache=None, cross_states=None,
+        cache_len=None, seq_axis=None):
+    """Returns (out, new_cache).
+
+    mode: train | prefill | decode.  positions: (T,) absolute positions of
+    the x tokens (decode: (1,) current position).  cache (decode/prefill):
+    {"k","v": (B, S_cache, Hkv, Dh)} (+"ck","cv" for cross layers).
+    """
+    B, T, d = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    q = shd(q, "batch", None, "heads", None)
+
+    if layer.cross:
+        # cross-attention: kv from image/encoder states (cached after first use)
+        if cache is not None and "ck" in cache:
+            k, v = cache["ck"], cache["cv"]
+            new_cache = cache
+        else:
+            cs = cross_states
+            k = jnp.einsum("bsd,dhk->bshk", cs, params["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", cs, params["wv"])
+            new_cache = {"ck": k, "cv": v} if mode == "prefill" else None
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+        mask = jnp.ones((T, k.shape[1]), bool)
+        out = _attend(q, _expand_kv(k, H), _expand_kv(v, H), mask,
+                      attn_softcap=cfg.attn_softcap)
+    else:
+        k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+        v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+        if cfg.qk_norm:
+            q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)  # cache stores post-RoPE keys
+
+        window = layer.window if layer.mixer == "swa" else 0
+
+        if mode == "decode":
+            assert cache is not None and T == 1
+            S = cache["k"].shape[1]
+            pos = positions[0]
+            slot = pos % S if window else jnp.minimum(pos, S - 1)
+            if cfg.kv_quant:
+                kq, ks = _kv_quantize(k)
+                vq, vs = _kv_quantize(v)
+                knew = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
+                vnew = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
+                ksn = jax.lax.dynamic_update_slice_in_dim(cache["k_s"], ks, slot, axis=1)
+                vsn = jax.lax.dynamic_update_slice_in_dim(cache["v_s"], vs, slot, axis=1)
+                knew = shd(knew, "cache_batch", "cache_seq", None, None)
+                vnew = shd(vnew, "cache_batch", "cache_seq", None, None)
+                new_cache = dict(cache, k=knew, v=vnew,
+                                 k_s=shd(ksn, "cache_batch", "cache_seq", None),
+                                 v_s=shd(vsn, "cache_batch", "cache_seq", None))
+                kf = _kv_dequantize(knew, ksn, k.dtype)
+                vf = _kv_dequantize(vnew, vsn, v.dtype)
+            else:
+                knew = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+                vnew = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+                knew = shd(knew, "cache_batch", "cache_seq", None, None)
+                vnew = shd(vnew, "cache_batch", "cache_seq", None, None)
+                new_cache = dict(cache, k=knew, v=vnew)
+                kf, vf = knew, vnew
+            sl = jnp.arange(S)
+            if window:
+                valid = (sl <= pos) | (pos >= S)  # ring buffer: all slots valid once full
+            else:
+                valid = sl <= pos
+            out = _attend(q, _expand_kv(kf, H), _expand_kv(vf, H),
+                          valid[None, :], attn_softcap=cfg.attn_softcap)
+        elif seq_axis is not None and mode == "train":
+            # context parallelism (shard_map local view): the sequence is
+            # sharded over ``seq_axis``; window layers take a kv halo from
+            # the left neighbor (the paper's halo update on the token
+            # grid), full-attention layers run ring attention (iterated
+            # halo).  k/v here are LOCAL shards with global positions.
+            from repro.distributed.ring import ring_attention
+            from repro.distributed.seqpar import seq_sliding_window_attention
+
+            qT = q.transpose(0, 2, 1, 3)       # (B, H, T, D)
+            kT = k.transpose(0, 2, 1, 3)       # (B, Hkv, T, D)
+            vT = v.transpose(0, 2, 1, 3)
+            if window:
+                oT = seq_sliding_window_attention(
+                    qT, kT, vT, window=window, axis_name=seq_axis)
+            else:
+                oT = ring_attention(qT, kT, vT, axis_name=seq_axis)
+            out = oT.transpose(0, 2, 1, 3)
+            new_cache = None
+        else:  # train / prefill
+            kh = shd(_expand_kv(k, H), "batch", None, "heads", None)
+            vh = shd(_expand_kv(v, H), "batch", None, "heads", None)
+            # block-local SWA only pays when the window covers a small
+            # fraction of the sequence (the dynamic-slice gather/scatter in
+            # the backward otherwise outweighs the skipped blocks —
+            # measured on gemma3 train_4k, see EXPERIMENTS.md §Perf G2)
+            if window and T >= 4 * (window + _Q_CHUNK):
+                out = _attend_swa(q, kh, vh, window=window, positions=positions,
+                                  attn_softcap=cfg.attn_softcap)
+            else:
+                qpos = kpos = positions
+                mask = (kpos[None, :] <= qpos[:, None] if layer.causal
+                        else jnp.ones((T, T), bool))
+                if window:
+                    mask = mask & (kpos[None, :] > qpos[:, None] - window)
+                out = _attend(q, kh, vh, mask, attn_softcap=cfg.attn_softcap)
+            new_cache = None
+            if mode == "prefill":
+                S_target = cache_len if cache_len is not None else T
+                if window:
+                    S_c = min(window, S_target)
+                    if T >= S_c:
+                        # keep the last S_c tokens, laid out ring-buffer style
+                        ks, vs = k[:, -S_c:], v[:, -S_c:]
+                        shift = (positions[-1] + 1) % S_c
+                        ks = jnp.roll(ks, shift, axis=1)
+                        vs = jnp.roll(vs, shift, axis=1)
+                    else:
+                        pad = S_c - T
+                        ks = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                        vs = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                else:
+                    pad = max(0, S_target - T)
+                    ks = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    vs = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                if cfg.kv_quant:
+                    kq, kss = _kv_quantize(ks)
+                    vq, vss = _kv_quantize(vs)
+                    new_cache = {
+                        "k": shd(kq, "cache_batch", "cache_seq", None, None),
+                        "v": shd(vq, "cache_batch", "cache_seq", None, None),
+                        "k_s": shd(kss, "cache_batch", "cache_seq", None),
+                        "v_s": shd(vss, "cache_batch", "cache_seq", None),
+                    }
+                else:
+                    new_cache = {
+                        "k": shd(ks, "cache_batch", "cache_seq", None, None),
+                        "v": shd(vs, "cache_batch", "cache_seq", None, None),
+                    }
+
+    out = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return shd(out, "batch", "seq", None), new_cache
+
+
+def cache_len_hint(cfg, layer) -> int:
+    return layer.window if (layer.mixer == "swa" and layer.window) else cfg.max_seq
+
+
+def init_cache_specs(cfg, layer, batch: int, cache_len: int, dtype) -> dict:
+    """ShapeDtypeStructs for one layer's decode cache."""
+    Hkv, Dh = cfg.n_kv, cfg.head_dim
+    if layer.cross:
+        n = cfg.n_cross_tokens
+        return {
+            "ck": jax.ShapeDtypeStruct((batch, n, Hkv, Dh), dtype),
+            "cv": jax.ShapeDtypeStruct((batch, n, Hkv, Dh), dtype),
+        }
+    S = min(layer.window, cache_len) if (layer.mixer == "swa" and layer.window) else cache_len
+    if cfg.kv_quant:
+        import jax.numpy as _jnp
+
+        return {
+            "k": jax.ShapeDtypeStruct((batch, S, Hkv, Dh), _jnp.int8),
+            "v": jax.ShapeDtypeStruct((batch, S, Hkv, Dh), _jnp.int8),
+            "k_s": jax.ShapeDtypeStruct((batch, S, Hkv), _jnp.float32),
+            "v_s": jax.ShapeDtypeStruct((batch, S, Hkv), _jnp.float32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, S, Hkv, Dh), dtype),
+        "v": jax.ShapeDtypeStruct((batch, S, Hkv, Dh), dtype),
+    }
+
+
+def cache_axes(cfg, layer) -> dict:
+    """Logical sharding axes matching :func:`init_cache_specs` leaves."""
+    kv = ("cache_batch", "cache_seq", None, None)
+    if layer.cross:
+        return {"ck": kv, "cv": kv}
+    if cfg.kv_quant:
+        sc = ("cache_batch", "cache_seq", None)
+        return {"k": kv, "v": kv, "k_s": sc, "v_s": sc}
+    return {"k": kv, "v": kv}

@@ -1,0 +1,139 @@
+"""Residual blocks: pre-norm (mixer | cross | ffn) wiring per Layer spec."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shd
+from . import attention, moe as moe_mod, ssm as ssm_mod
+from .layers import glu, act_fn, rms_norm
+from .params import ParamSpec
+
+
+def ffn_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wi": ParamSpec((d, 2, f), ("fsdp", None, "ffn")),
+            "wo": ParamSpec((f, d), ("ffn", "fsdp")),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("fsdp", "ffn")),
+        "wo": ParamSpec((f, d), ("ffn", "fsdp")),
+    }
+
+
+def ffn_fwd(params, cfg, x):
+    if cfg.act in ("swiglu", "geglu"):
+        h = glu(jnp.einsum("btd,dgf->btgf", x, params["wi"]), cfg.act)
+    else:
+        h = act_fn(cfg.act)(x @ params["wi"])
+    h = shd(h, "batch", None, "ffn")
+    return shd(h @ params["wo"], "batch", "seq", None)
+
+
+def layer_specs(cfg, layer) -> dict:
+    d = cfg.d_model
+    out = {"ln1": ParamSpec((d,), (None,), "zeros" if cfg.gemma_norm else "ones")}
+    if layer.mixer in ("attn", "swa"):
+        out["mixer"] = attention.specs(cfg, layer)
+    elif layer.mixer == "mamba":
+        out["mixer"] = ssm_mod.specs(cfg)
+    elif layer.mixer != "none":
+        raise ValueError(layer.mixer)
+    if layer.cross:
+        out["lnx"] = ParamSpec((d,), (None,), "zeros" if cfg.gemma_norm else "ones")
+        out["cross"] = attention.specs(cfg, layer.__class__(mixer="attn", cross=True))
+        out["cross_gate"] = ParamSpec((), (), "zeros")  # tanh-gated (llama-vision)
+    if layer.moe or layer.ffn:
+        out["ln2"] = ParamSpec((d,), (None,), "zeros" if cfg.gemma_norm else "ones")
+        out["ffn"] = moe_mod.specs(cfg) if layer.moe else ffn_specs(cfg)
+    return out
+
+
+def layer_fwd(params, cfg, layer, x, *, mode, positions, cache=None,
+              cross_states=None, seq_axis=None, cache_len=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cache is not None:
+        new_cache = dict(cache)
+    elif mode == "prefill":
+        new_cache = {}  # prefill CREATES the cache
+    else:
+        new_cache = None
+    norm = lambda h, w: rms_norm(h, w, cfg.norm_eps, scale_plus_one=cfg.gemma_norm)
+
+    if layer.mixer in ("attn", "swa"):
+        self_layer = dataclasses.replace(layer, cross=False)  # mixer = self-attn
+        h, c = attention.fwd(
+            params["mixer"], cfg, self_layer, norm(x, params["ln1"]),
+            mode=mode, positions=positions,
+            cache=cache.get("mixer") if cache is not None else None,
+            cache_len=cache_len, seq_axis=seq_axis,
+        )
+        x = x + h
+        if new_cache is not None and c is not None:
+            new_cache["mixer"] = c
+    elif layer.mixer == "mamba":
+        h, c = ssm_mod.fwd(
+            params["mixer"], cfg, norm(x, params["ln1"]),
+            mode=mode, cache=cache.get("mixer") if cache is not None else None,
+            seq_axis=seq_axis,
+        )
+        x = x + h
+        if new_cache is not None and c is not None:
+            new_cache["mixer"] = c
+
+    if layer.cross:
+        h, c = attention.fwd(
+            params["cross"], cfg,
+            type(layer)(mixer="attn", cross=True),
+            norm(x, params["lnx"]),
+            mode=mode, positions=positions,
+            cache=cache.get("cross") if cache is not None else None,
+            cross_states=cross_states,
+        )
+        x = x + jnp.tanh(params["cross_gate"]) * h
+        if new_cache is not None and c is not None:
+            new_cache["cross"] = c
+
+    if layer.moe or layer.ffn:
+        h = norm(x, params["ln2"])
+        if layer.moe:
+            h, a = moe_mod.fwd(params["ffn"], cfg, h)
+            aux = aux + a
+        else:
+            h = ffn_fwd(params["ffn"], cfg, h)
+        x = x + h
+    return shd(x, "batch", "seq", None), new_cache, aux
+
+
+def layer_cache_specs(cfg, layer, batch: int, cache_len: int, dtype) -> dict:
+    out = {}
+    if layer.mixer in ("attn", "swa"):
+        out["mixer"] = attention.init_cache_specs(
+            cfg, dataclasses.replace(layer, cross=False), batch, cache_len, dtype
+        )
+    elif layer.mixer == "mamba":
+        out["mixer"] = ssm_mod.init_cache_specs(cfg, batch, dtype)
+    if layer.cross:
+        out["cross"] = attention.init_cache_specs(
+            cfg, type(layer)(mixer="attn", cross=True), batch, cache_len, dtype
+        )
+    return out
+
+
+def layer_cache_axes(cfg, layer) -> dict:
+    out = {}
+    if layer.mixer in ("attn", "swa"):
+        out["mixer"] = attention.cache_axes(cfg, dataclasses.replace(layer, cross=False))
+    elif layer.mixer == "mamba":
+        out["mixer"] = ssm_mod.cache_axes(cfg)
+    if layer.cross:
+        out["cross"] = attention.cache_axes(
+            cfg, dataclasses.replace(layer, mixer="attn", cross=True)
+        )
+    return out

@@ -1,0 +1,103 @@
+"""Shared neural-net layers: norms, RoPE, activations, chunked loss."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shd
+
+
+def rms_norm(x, w, eps: float = 1e-6, *, scale_plus_one: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    wf = w.astype(jnp.float32)
+    if scale_plus_one:  # gemma convention
+        wf = wf + 1.0
+    return (y * wf).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def glu(x2, kind: str):
+    """x2: (..., 2, f) fused gate/up -> (..., f)."""
+    g, u = x2[..., 0, :], x2[..., 1, :]
+    if kind == "swiglu":
+        return jax.nn.silu(g) * u
+    if kind == "geglu":
+        return jax.nn.gelu(g) * u
+    raise ValueError(kind)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., T, H, D); positions: (..., T) or (T,)."""
+    D = x.shape[-1]
+    half = D // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def cross_entropy_chunked(h, w_out, labels, *, chunk: int = 512,
+                          logit_softcap: float = 0.0, n_valid: int | None = None):
+    """Mean token cross-entropy with sequence-chunked logits.
+
+    h: (B, T, d) final hidden states; w_out: (d, V) (possibly the tied
+    embedding, transposed); labels: (B, T) int32 (-100 = ignore).  Never
+    materializes the full (B, T, V) logits — essential for the 256k-vocab
+    architectures.
+    """
+    B, T, d = h.shape
+    V = w_out.shape[-1]
+    chunk = min(chunk, T)
+    if T % chunk:
+        chunk = T  # fall back (smoke-test shapes)
+    nc = T // chunk
+    hc = h.reshape(B, nc, chunk, d).swapaxes(0, 1)  # (nc, B, c, d)
+    lc = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        loss_sum, n = carry
+        hb, lb = xs
+        logits = shd(
+            (hb @ w_out).astype(jnp.float32), "batch", None, "vocab"
+        )
+        if logit_softcap:
+            logits = softcap(logits, logit_softcap)
+        if n_valid is not None and n_valid != V:  # mask vocab padding
+            logits = jnp.where(jnp.arange(V) < n_valid, logits, -1e30)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lb >= 0
+        loss_sum = loss_sum + jnp.sum(jnp.where(valid, lse - ll, 0.0))
+        n = n + valid.sum()
+        return (loss_sum, n), None
+
+    # remat: the scan VJP would otherwise save the STACKED (nc,B,c,V) fp32
+    # logits — recompute them per chunk in the backward instead
+    body = jax.checkpoint(body)
+    (loss_sum, n), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, lc)
+    )
+    return loss_sum / jnp.maximum(n, 1)

@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-shardable).
+
+Dispatch avoids the GShard (tokens, experts, capacity) one-hot einsum —
+infeasible at 384 experts — in favor of sort + bincount + scatter:
+
+    route -> top-k -> stable-sort pairs by expert -> position-in-expert via
+    exclusive-cumsum starts -> scatter into an (E, C, d) buffer (drop on
+    overflow) -> batched expert GEMMs -> weighted scatter-add combine.
+
+All shapes are static; the (E, C, d) buffer is sharded over the ``experts``
+logical axis (expert parallelism) while token tensors stay batch-sharded,
+so GSPMD materializes the dispatch as collective traffic between the two
+shardings.  Load-balance auxiliary loss follows Switch (eq. 4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shd
+from .layers import glu, act_fn
+from .params import ParamSpec
+
+
+def specs(cfg) -> dict:
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.n_experts, m.d_ff
+    out = {
+        "router": ParamSpec((d, E), ("fsdp", None), std=0.006),
+        "wi": ParamSpec((E, d, 2, f), ("experts", "fsdp", None, None)),
+        "wo": ParamSpec((E, f, d), ("experts", None, "fsdp")),
+    }
+    if m.n_shared:
+        out["shared_wi"] = ParamSpec((d, 2, m.n_shared * f), ("fsdp", None, "ffn"))
+        out["shared_wo"] = ParamSpec((m.n_shared * f, d), ("ffn", "fsdp"))
+    return out
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = int(m.top_k * n_tokens * m.capacity_factor / m.n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def fwd(params, cfg, x):
+    """x: (B, T, d) -> (out, aux_loss).
+
+    GROUPED dispatch (GShard-style): each sequence is a routing group, so
+    the sort/scatter stays local to its batch shard and the (B, E, C, d)
+    expert buffer is sharded batch-on-B x experts-on-E — the B->E
+    resharding between dispatch and the expert GEMMs is the EP all-to-all.
+    Capacity is per group (Switch/GShard semantics)."""
+    m = cfg.moe
+    B, T, d = x.shape
+    E, K = m.n_experts, m.top_k
+
+    logits = (x @ params["router"]).astype(jnp.float32)  # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eid = jax.lax.top_k(probs, K)  # (B, T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e f_e * P_e (global statistics)
+    token_frac = (
+        jnp.zeros((E,), jnp.float32).at[eid.reshape(-1)].add(1.0) / (B * T * K)
+    )
+    prob_frac = probs.mean(axis=(0, 1))
+    aux = E * jnp.sum(token_frac * prob_frac)
+
+    C = capacity(T, cfg)
+
+    def dispatch_group(xg, eidg, gateg):
+        """One sequence: xg (T, d); eidg/gateg (T, K)."""
+        flat_eid = eidg.reshape(-1)  # (T*K,)
+        order = jnp.argsort(flat_eid, stable=True)
+        sorted_eid = flat_eid[order]
+        sorted_tok = order // K
+        counts = jnp.zeros((E,), jnp.int32).at[flat_eid].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(T * K, dtype=jnp.int32) - starts[sorted_eid]
+        dest = jnp.where(pos < C, sorted_eid * C + pos, E * C)  # E*C -> drop
+        buf = jnp.zeros((E * C, d), xg.dtype).at[dest].set(
+            xg[sorted_tok], mode="drop"
+        )
+        return buf.reshape(E, C, d), dest, sorted_tok, gateg.reshape(-1)[order]
+
+    eb, dest, sorted_tok, w_sorted = jax.vmap(dispatch_group)(x, eid, gate)
+    eb = shd(eb, "batch", "experts", None, None)  # (B, E, C, d)
+
+    h = glu(jnp.einsum("gecd,edif->gecif", eb, params["wi"]), cfg.act)
+    ob = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+    ob = shd(ob, "batch", "experts", None, None)
+
+    def combine_group(obg, destg, tokg, wg):
+        vals = obg.reshape(E * C, d).at[destg].get(mode="fill", fill_value=0)
+        return jnp.zeros((T, d), x.dtype).at[tokg].add(
+            vals * wg[:, None].astype(x.dtype)
+        )
+
+    out = jax.vmap(combine_group)(ob, dest, sorted_tok, w_sorted)
+
+    if m.n_shared:
+        hs = glu(jnp.einsum("btd,dgf->btgf", x, params["shared_wi"]), cfg.act)
+        out = out + hs @ params["shared_wo"]
+
+    return shd(out, "batch", "seq", None), aux

@@ -1,0 +1,137 @@
+"""Mamba-2 block (SSD mixer): in_proj -> causal conv -> selective SSM -> gate.
+
+The SSD scan comes from :mod:`repro.kernels.ssd` (chunk-parallel, Pallas on
+TPU).  Under sequence parallelism both the conv (k-1 token halo) and the
+chunk-state recurrence (ppermute doubling scan) use the paper's
+halo-exchange pattern via :mod:`repro.distributed.seqpar`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shd
+from repro.distributed.seqpar import seq_conv1d_causal
+from repro.kernels.ssd import ssd_scan, ssd_decode_step
+from .layers import rms_norm
+from .params import ParamSpec
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, H, conv_dim
+
+
+def specs(cfg) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, conv_dim = _dims(cfg)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + H  # z, xBC, dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("fsdp", "ffn")),
+        "conv_w": ParamSpec((s.conv_kernel, conv_dim), (None, None)),
+        "conv_b": ParamSpec((conv_dim,), (None,), "zeros"),
+        "A_log": ParamSpec((H,), (None,), "zeros"),   # A = -exp(A_log) ~ -1
+        "D": ParamSpec((H,), (None,), "ones"),
+        "dt_bias": ParamSpec((H,), (None,), "zeros"),
+        "norm_w": ParamSpec((d_in,), (None,), "ones"),
+        "out_proj": ParamSpec((d_in, d), ("ffn", "fsdp")),
+    }
+
+
+def _split(cfg, zxbcdt):
+    s = cfg.ssm
+    d_in, H, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim :]
+    return z, xBC, dt
+
+
+def fwd(params, cfg, x, *, mode, cache=None, seq_axis: str | None = None):
+    """x: (B, T, d). Returns (out, new_cache).
+
+    cache (decode): {"conv": (B, K-1, conv_dim), "ssm": (B, H, N, P)}."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    d_in, H, conv_dim = _dims(cfg)
+    N, G, P = s.d_state, s.n_groups, s.head_dim
+
+    zxbcdt = x @ params["in_proj"]
+    z, xBC, dt = _split(cfg, zxbcdt)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if mode == "decode":
+        assert cache is not None and T == 1
+        K = s.conv_kernel
+        conv_st = cache["conv"]  # (B, K-1, conv_dim)
+        window = jnp.concatenate([conv_st, xBC], axis=1)  # (B, K, conv_dim)
+        # window[k]: oldest..current; train conv applies w[j] to x[t-j], so
+        # the current token takes w[0] -> flip w along taps
+        xBC_t = jnp.einsum("bkc,kc->bc", window, params["conv_w"][::-1]) + params["conv_b"]
+        xBC_t = jax.nn.silu(xBC_t)
+        new_conv = window[:, 1:]
+        xs = xBC_t[..., :d_in].reshape(B, H, P)
+        Bs = xBC_t[..., d_in : d_in + G * N].reshape(B, G, N)
+        Cs = xBC_t[..., d_in + G * N :].reshape(B, G, N)
+        dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+        y, h_new = ssd_decode_step(cache["ssm"].astype(jnp.float32), xs.astype(jnp.float32), dt_t, A, Bs, Cs)
+        y = y + params["D"][None, :, None] * xs
+        y = y.reshape(B, 1, d_in).astype(x.dtype)
+        new_cache = dict(cache, conv=new_conv, ssm=shd(h_new.astype(cache["ssm"].dtype), "cache_batch", "state_heads", None, None))
+    else:
+        xBC = seq_conv1d_causal(xBC, params["conv_w"], axis_name=seq_axis)
+        xBC = jax.nn.silu(xBC + params["conv_b"])
+        xs = xBC[..., :d_in].reshape(B, T, H, P)
+        Bs = xBC[..., d_in : d_in + G * N].reshape(B, T, G, N)
+        Cs = xBC[..., d_in + G * N :].reshape(B, T, G, N)
+        # TP: broadcast grouped B/C to per-head and shard everything over
+        # the state-head axis — the (L,L,H) intra-chunk intermediates are
+        # the SSD memory hot spot and divide H-ways
+        Bs = shd(jnp.repeat(Bs, H // G, axis=2), "batch", None, "state_heads", None)
+        Cs = shd(jnp.repeat(Cs, H // G, axis=2), "batch", None, "state_heads", None)
+        xs = shd(xs, "batch", None, "state_heads", None)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+        dtp = shd(dtp, "batch", None, "state_heads")
+        if seq_axis is not None:
+            from repro.distributed.seqpar import seq_ssd_scan
+
+            y, h_fin = seq_ssd_scan(xs, dtp, A, Bs, Cs, chunk=s.chunk, axis_name=seq_axis)
+        else:
+            y, h_fin = ssd_scan(xs, dtp, A, Bs, Cs, chunk=min(s.chunk, T))
+        y = y + params["D"][None, None, :, None] * xs
+        y = y.reshape(B, T, d_in)
+        new_cache = None
+        if mode == "prefill":
+            K = s.conv_kernel
+            pad = jnp.zeros((B, max(0, K - 1 - T), conv_dim), xBC.dtype)
+            # conv state must hold the PRE-activation stream (post in_proj)
+            _, xBC_raw, _ = _split(cfg, zxbcdt)
+            new_cache = {
+                "conv": jnp.concatenate([pad, xBC_raw[:, -(K - 1):]], axis=1),
+                "ssm": shd(h_fin.astype(x.dtype), "cache_batch", "state_heads", None, None),
+            }
+
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return shd(out, "batch", "seq", None), new_cache
+
+
+def init_cache_specs(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_in, H, conv_dim = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, H, s.d_state, s.head_dim), dtype),
+    }
+
+
+def cache_axes(cfg) -> dict:
+    return {
+        "conv": ("cache_batch", None, None),
+        "ssm": ("cache_batch", "state_heads", None, None),
+    }

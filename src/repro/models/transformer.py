@@ -1,0 +1,226 @@
+"""Full model: embeddings, scanned super-block stacks, loss, prefill/decode.
+
+Layers are grouped into homogeneous *stacks* (pattern x repeat) and scanned
+with ``jax.lax.scan`` over the repeat axis — HLO size stays O(pattern), not
+O(n_layers), which keeps 100-layer dry-run compiles fast.  Each scan body
+is wrapped in ``jax.checkpoint`` (configurable policy) for activation
+rematerialization.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shd
+from . import blocks
+from .layers import cross_entropy_chunked, rms_norm
+from .params import ParamSpec, stack_tree
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def param_specs(cfg) -> dict:
+    d = cfg.d_model
+    out: dict[str, Any] = {}
+    if cfg.vocab:
+        out["embed"] = ParamSpec((cfg.padded_vocab, d), ("vocab", "fsdp"))
+    out["stacks"] = [
+        stack_tree(
+            {"layers": [blocks.layer_specs(cfg, l) for l in pattern]}, repeat
+        )
+        for pattern, repeat in cfg.stacks
+    ]
+    out["final_norm"] = ParamSpec((d,), (None,), "zeros" if cfg.gemma_norm else "ones")
+    if cfg.vocab and not cfg.tie_embeddings:
+        out["head"] = ParamSpec((d, cfg.padded_vocab), ("fsdp", "vocab"))
+    if cfg.encoder is not None:
+        out["encoder"] = param_specs(cfg.encoder)
+    return out
+
+
+def _stack_fwd(stack_params, cfg, pattern, x, *, mode, positions,
+               cache=None, cross_states=None, seq_axis=None, remat="full",
+               cache_len=None):
+    """Scan one stack. cache: pytree with leading repeat axis (or None)."""
+
+    def body(carry, xs):
+        x, aux = carry
+        p_r, c_r = xs
+        new_c = [] if (c_r is not None or mode == "prefill") else None
+        for i, layer in enumerate(pattern):
+            x, ci, a = blocks.layer_fwd(
+                p_r["layers"][i], cfg, layer, x, mode=mode, positions=positions,
+                cache=None if c_r is None else c_r[i],
+                cross_states=cross_states, seq_axis=seq_axis,
+                cache_len=cache_len,
+            )
+            aux = aux + a
+            if new_c is not None:
+                new_c.append(ci)
+        return (x, aux), new_c
+
+    if remat != "none":
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat])
+
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stack_params, cache)
+    )
+    return x, aux, new_cache
+
+
+def embed_tokens(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shd(x, "batch", "seq", None)
+
+
+def fwd(params, cfg, inputs, *, mode, positions=None, caches=None,
+        cross_states=None, seq_axis=None, remat="full", cache_len=None):
+    """Backbone forward.
+
+    inputs: int tokens (B, T) if cfg.vocab else embeddings (B, T, d).
+    caches: list (per stack) of per-layer cache trees with leading repeat
+    axis, or None.  Returns (hidden (B,T,d), new_caches, aux)."""
+    if cfg.vocab:
+        x = embed_tokens(params, cfg, inputs)
+        T = inputs.shape[1]
+    else:
+        x = shd(inputs, "batch", "seq", None)
+        T = inputs.shape[1]
+    if positions is None:
+        positions = jnp.arange(T)
+
+    # encoder (enc-dec models): encode cross states once (at decode the
+    # cross k/v live in the cache, so no encoder pass is needed)
+    if cfg.encoder is not None and cross_states is None and mode != "decode":
+        raise ValueError("enc-dec model needs cross_states (run encoder first)")
+
+    new_caches = []
+    aux = jnp.zeros((), jnp.float32)
+    for si, (pattern, repeat) in enumerate(cfg.stacks):
+        x, a, nc = _stack_fwd(
+            params["stacks"][si], cfg, pattern, x, mode=mode,
+            positions=positions,
+            cache=None if caches is None else caches[si],
+            cross_states=cross_states, seq_axis=seq_axis, remat=remat,
+            cache_len=cache_len,
+        )
+        aux = aux + a
+        new_caches.append(nc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps,
+                 scale_plus_one=cfg.gemma_norm)
+    return x, (new_caches if caches is not None or mode == "prefill" else None), aux
+
+
+def lm_head_matrix(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+def logits_fn(params, cfg, h):
+    logits = (h @ lm_head_matrix(params, cfg)).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if cfg.padded_vocab != cfg.vocab:  # mask the padding rows
+        logits = jnp.where(
+            jnp.arange(cfg.padded_vocab) < cfg.vocab, logits, -1e30
+        )
+    return logits
+
+
+def run_encoder(params, cfg, batch, *, remat="full"):
+    enc = cfg.encoder
+    src = batch["src_embeds"]  # frontend stub: precomputed frame embeddings
+    h, _, _ = fwd(params["encoder"], enc, src, mode="train", remat=remat)
+    return h
+
+
+def encode_cross_states(params, cfg, batch, *, remat="full"):
+    if cfg.encoder is not None:
+        return run_encoder(params, cfg, batch, remat=remat)
+    if cfg.cross_source == "image":
+        return batch["image_embeds"]  # frontend stub
+    return None
+
+
+def loss_fn(params, cfg, batch, *, remat="full", aux_weight=0.01,
+            loss_chunk=512):
+    """batch: {"tokens" (B,T) int32, "labels" (B,T) int32, [frontend inputs]}."""
+    cross = encode_cross_states(params, cfg, batch, remat=remat)
+    h, _, aux = fwd(params, cfg, batch["tokens"], mode="train",
+                    cross_states=cross, remat=remat)
+    loss = cross_entropy_chunked(
+        h, lm_head_matrix(params, cfg), batch["labels"],
+        chunk=loss_chunk, logit_softcap=cfg.logit_softcap,
+        n_valid=cfg.vocab,
+    )
+    return loss + aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------
+
+def cache_specs(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct cache tree (leading repeat axis per stack)."""
+    out = []
+    for pattern, repeat in cfg.stacks:
+        per_layer = [
+            jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeat, *s.shape), s.dtype),
+                blocks.layer_cache_specs(cfg, l, batch, cache_len, dtype),
+            )
+            for l in pattern
+        ]
+        out.append(per_layer)
+    return out
+
+
+def prefill(params, cfg, tokens_or_embeds, *, cross_states=None, remat="full",
+            cache_len=None):
+    """Process the prompt; returns (last-token logits, caches)."""
+    h, caches, _ = fwd(params, cfg, tokens_or_embeds, mode="prefill",
+                       cross_states=cross_states, remat=remat,
+                       cache_len=cache_len)
+    logits = logits_fn(params, cfg, h[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(params, cfg, token, pos, caches, *, cross_states=None):
+    """One decode step. token: (B, 1) int32 (or (B,1,d) embeds); pos: () int32."""
+    positions = pos[None] if pos.ndim == 0 else pos
+    h, caches, _ = fwd(params, cfg, token, mode="decode",
+                       positions=positions, caches=caches,
+                       cross_states=cross_states)
+    return logits_fn(params, cfg, h)[:, -1], caches
+
+
+def _zip_shard(specs, axes, rules):
+    if isinstance(specs, dict):
+        return {k: _zip_shard(specs[k], axes[k], rules) for k in specs}
+    return rules.sharding(None, *axes, shape=specs.shape)
+
+
+def cache_shardings(cfg, rules, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """NamedShardings for the cache tree (leading repeat axis unsharded;
+    non-divisible dims drop mesh axes)."""
+    out = []
+    for pattern, repeat in cfg.stacks:
+        per_layer = []
+        for l in pattern:
+            sp = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((repeat, *s.shape), s.dtype),
+                blocks.layer_cache_specs(cfg, l, batch, cache_len, dtype),
+            )
+            per_layer.append(_zip_shard(sp, blocks.layer_cache_axes(cfg, l), rules))
+        out.append(per_layer)
+    return out

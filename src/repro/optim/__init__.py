@@ -1,0 +1,5 @@
+from .adamw import AdamWCfg, init, update, state_specs, state_shardings
+from . import compress, quant, schedule
+
+__all__ = ["AdamWCfg", "init", "update", "state_specs", "state_shardings",
+           "compress", "quant", "schedule"]

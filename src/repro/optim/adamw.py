@@ -1,0 +1,127 @@
+"""AdamW with selectable moment storage: fp32 | bf16 | int8 (blockwise).
+
+Functional (optax-style) but self-contained.  The int8 mode keeps both
+moments block-quantized between steps — the memory recipe that fits
+kimi-k2 (1T params) on 512 x 16 GB chips (see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWCfg:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments: str = "float32"     # float32 | bfloat16 | int8
+
+
+def _store(x, mode, p=1):
+    if mode == "float32":
+        return x
+    if mode == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    if mode == "int8":
+        return quant.quantize(x, p=p)
+    raise ValueError(mode)
+
+
+def _load(x, mode, p=1):
+    if mode == "int8":
+        return quant.dequantize(x, p=p)
+    return jnp.asarray(x, jnp.float32) if x.dtype != jnp.float32 else x
+
+
+def init(params, cfg: AdamWCfg):
+    zeros = jax.tree.map(lambda x: _store(jnp.zeros(x.shape, jnp.float32), cfg.moments, p=1), params)
+    zeros2 = jax.tree.map(lambda x: _store(jnp.zeros(x.shape, jnp.float32), cfg.moments, p=4), params)
+    return {"m": zeros, "v": zeros2, "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def update(grads, state, params, cfg: AdamWCfg, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+
+    is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _load(m, cfg.moments, p=1)
+        vf = _load(v, cfg.moments, p=4)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        mhat = mf / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = vf / (1 - cfg.b2 ** step.astype(jnp.float32))
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:  # no decay on norms/scalars
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - cfg.lr * lr_scale * upd).astype(p.dtype)
+        return new_p, _store(mf, cfg.moments, p=1), _store(vf, cfg.moments, p=4)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"], is_leaf=is_q)
+    flat_v = jax.tree.leaves(state["v"], is_leaf=is_q)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}
+
+
+def state_specs(param_specs_tree, cfg: AdamWCfg, rules=None):
+    """ShapeDtypeStructs (+ optional shardings) for the optimizer state,
+    mirroring the ParamSpec tree — used by the dry-run."""
+    from repro.models.params import ParamSpec
+
+    is_spec = lambda x: isinstance(x, ParamSpec)
+
+    def one(s: ParamSpec):
+        if cfg.moments == "int8":
+            (qs, qa), (ss, sa) = quant.quant_specs(s.shape, s.axes)
+            return {
+                "q": jax.ShapeDtypeStruct(qs, jnp.int8),
+                "s": jax.ShapeDtypeStruct(ss, jnp.float32),
+            }
+        dt = jnp.bfloat16 if cfg.moments == "bfloat16" else jnp.float32
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    m = jax.tree.map(one, param_specs_tree, is_leaf=is_spec)
+    return {"m": m, "v": jax.tree.map(one, param_specs_tree, is_leaf=is_spec),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def state_shardings(param_specs_tree, cfg: AdamWCfg, rules):
+    from repro.models.params import ParamSpec
+
+    is_spec = lambda x: isinstance(x, ParamSpec)
+
+    def one(s: ParamSpec):
+        if cfg.moments == "int8":
+            (qs, qa), (ss, sa) = quant.quant_specs(s.shape, s.axes)
+            return {"q": rules.sharding(*qa, shape=qs),
+                    "s": rules.sharding(*sa, shape=ss)}
+        return rules.sharding(*s.axes, shape=s.shape)
+
+    m = jax.tree.map(one, param_specs_tree, is_leaf=is_spec)
+    return {"m": m, "v": jax.tree.map(one, param_specs_tree, is_leaf=is_spec),
+            "step": rules.sharding()}

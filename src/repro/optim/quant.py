@@ -1,0 +1,64 @@
+"""Blockwise int8 tensor quantization (optimizer moments, gradient comms).
+
+Dynamic per-block scaling along the last axis (block = 128 elements),
+following the 8-bit-optimizer recipe (Dettmers et al., arXiv:2110.02861).
+At 1T parameters this is what makes Adam moments fit on 512 chips:
+fp32 m+v = 8 B/param -> int8 m+v + scales = ~2.03 B/param.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def _nblocks(n: int) -> int:
+    return -(-n // BLOCK)
+
+
+def quantize(x, p: int = 1):
+    """x: (..., n) fp -> {"q": int8 (..., n), "s": fp32 (..., nblocks)}.
+
+    ``p`` selects the codebook: 1 = linear (absolute error <= s/127 — fine
+    for the first moment), 4 = power-law ``x = sign(q) * s * (|q|/127)^4``
+    (relative resolution over ~9 decades — required for the second moment,
+    whose per-block dynamic range would underflow a linear code and blow
+    up ``m / sqrt(v)``)."""
+    n = x.shape[-1]
+    nb = _nblocks(n)
+    pad = nb * BLOCK - n
+    xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(*x.shape[:-1], nb, BLOCK)
+    s = jnp.max(jnp.abs(xb), axis=-1)  # (..., nb)
+    s = jnp.where(s == 0.0, 1.0, s)
+    y = xb / s[..., None]  # in [-1, 1]
+    if p == 1:
+        q = jnp.round(127.0 * y)
+    else:
+        q = jnp.round(127.0 * jnp.sign(y) * jnp.abs(y) ** (1.0 / p))
+    q = q.astype(jnp.int8).reshape(*x.shape[:-1], nb * BLOCK)[..., :n]
+    return {"q": q, "s": s}
+
+
+def dequantize(qs, p: int = 1):
+    q, s = qs["q"], qs["s"]
+    n = q.shape[-1]
+    nb = s.shape[-1]
+    pad = nb * BLOCK - n
+    qp = jnp.pad(q.astype(jnp.float32), [(0, 0)] * (q.ndim - 1) + [(0, pad)])
+    y = qp / 127.0
+    if p != 1:
+        y = jnp.sign(y) * jnp.abs(y) ** p
+    xb = y.reshape(*q.shape[:-1], nb, BLOCK) * s[..., None]
+    return xb.reshape(*q.shape[:-1], nb * BLOCK)[..., :n]
+
+
+def quant_specs(shape, axes):
+    """ParamSpec-style (shape, axes) pairs for the quantized representation."""
+    nb = _nblocks(shape[-1])
+    return (
+        (shape, axes),                      # q (int8)
+        ((*shape[:-1], nb), (*axes[:-1], None)),  # s — block axis unsharded
+    )

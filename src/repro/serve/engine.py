@@ -1,0 +1,55 @@
+"""Minimal batched serving engine: prefill + greedy/temperature decode.
+
+Caches are functional pytrees (KV ring buffers for sliding-window layers,
+SSM/conv states for Mamba layers, encoder memory for enc-dec/VLM), so the
+whole decode step jits to one executable; the engine just drives it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+
+
+class Engine:
+    def __init__(self, cfg, params, *, cache_len: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len or cfg.max_seq
+        self._decode = jax.jit(
+            lambda params, token, pos, caches, cross: tf.decode_step(
+                params, cfg, token, pos, caches, cross_states=cross
+            )
+        )
+        self._prefill = jax.jit(
+            lambda params, tokens, cross: tf.prefill(
+                params, cfg, tokens, cross_states=cross, cache_len=self.cache_len
+            )
+        )
+
+    def generate(self, tokens, n_new: int, *, cross_inputs=None,
+                 temperature: float = 0.0, key=None):
+        """tokens: (B, T) prompt. Returns (B, n_new) generated ids."""
+        cfg = self.cfg
+        cross = None
+        if cfg.encoder is not None or cfg.cross_source == "image":
+            batch = dict(cross_inputs or {})
+            cross = tf.encode_cross_states(self.params, cfg, batch)
+        logits, caches = self._prefill(self.params, tokens, cross)
+        B, T = tokens.shape
+        out = []
+        cur = None
+        for i in range(n_new):
+            if temperature > 0.0:
+                key, k = jax.random.split(key)
+                cur = jax.random.categorical(k, logits / temperature)[:, None]
+            else:
+                cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out.append(cur)
+            pos = jnp.asarray(T + i, jnp.int32)
+            logits, caches = self._decode(self.params, cur, pos, caches, cross)
+        return jnp.concatenate(out, axis=1)

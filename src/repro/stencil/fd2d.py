@@ -1,0 +1,68 @@
+"""Finite differences on a 2-D regular staggered grid
+(ParallelStencil.FiniteDifferences2D analogue; conventions as fd3d)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "inn", "d_xa", "d_ya", "d_xi", "d_yi",
+    "d2_xa", "d2_ya", "d2_xi", "d2_yi",
+    "av", "av_xa", "av_ya", "av_xi", "av_yi",
+]
+
+
+def inn(A):
+    return A[1:-1, 1:-1]
+
+
+def d_xa(A):
+    return A[1:, :] - A[:-1, :]
+
+
+def d_ya(A):
+    return A[:, 1:] - A[:, :-1]
+
+
+def d_xi(A):
+    return A[1:, 1:-1] - A[:-1, 1:-1]
+
+
+def d_yi(A):
+    return A[1:-1, 1:] - A[1:-1, :-1]
+
+
+def d2_xa(A):
+    return A[2:, :] - 2.0 * A[1:-1, :] + A[:-2, :]
+
+
+def d2_ya(A):
+    return A[:, 2:] - 2.0 * A[:, 1:-1] + A[:, :-2]
+
+
+def d2_xi(A):
+    return A[2:, 1:-1] - 2.0 * A[1:-1, 1:-1] + A[:-2, 1:-1]
+
+
+def d2_yi(A):
+    return A[1:-1, 2:] - 2.0 * A[1:-1, 1:-1] + A[1:-1, :-2]
+
+
+def av(A):
+    return 0.25 * (A[:-1, :-1] + A[1:, :-1] + A[:-1, 1:] + A[1:, 1:])
+
+
+def av_xa(A):
+    return 0.5 * (A[1:, :] + A[:-1, :])
+
+
+def av_ya(A):
+    return 0.5 * (A[:, 1:] + A[:, :-1])
+
+
+def av_xi(A):
+    return 0.5 * (A[1:, 1:-1] + A[:-1, 1:-1])
+
+
+def av_yi(A):
+    return 0.5 * (A[1:-1, 1:] + A[1:-1, :-1])

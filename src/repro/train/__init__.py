@@ -1,0 +1,4 @@
+from .step import make_train_step, TrainCfg
+from .trainer import Trainer
+
+__all__ = ["make_train_step", "TrainCfg", "Trainer"]

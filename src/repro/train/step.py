@@ -1,0 +1,82 @@
+"""Train step: loss -> grads (with microbatch accumulation) -> AdamW.
+
+``grad_accum > 1`` scans over microbatches (sequential accumulation) so
+per-device activation memory scales with the microbatch, not the global
+batch — required by the big dry-run cells (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.models import transformer as tf
+from repro.optim import schedule as sched
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    opt: optim.AdamWCfg = optim.AdamWCfg()
+    grad_accum: int = 1
+    remat: str = "full"
+    warmup: int = 100
+    total_steps: int = 10000
+    aux_weight: float = 0.01
+    loss_chunk: int = 512
+
+
+def _split_micro(batch, n):
+    def f(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape(n, B // n, *x.shape[1:])
+
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(cfg, tcfg: TrainCfg):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = tf.loss_fn(
+            params, cfg, mb, remat=tcfg.remat,
+            aux_weight=tcfg.aux_weight, loss_chunk=tcfg.loss_chunk,
+        )
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if tcfg.grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            micro = _split_micro(batch, tcfg.grad_accum)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(body, (gzero, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / tcfg.grad_accum, gsum)
+            loss = lsum / tcfg.grad_accum
+            metrics = {"xent": loss, "aux": jnp.zeros(())}
+
+        lr_scale = sched.warmup_cosine(
+            opt_state["step"], warmup=tcfg.warmup, total=tcfg.total_steps
+        )
+        params, opt_state, om = optim.update(
+            grads, opt_state, params, tcfg.opt, lr_scale=lr_scale
+        )
+        metrics = dict(metrics, loss=loss, lr_scale=lr_scale, **om)
+        return params, opt_state, metrics
+
+    return train_step

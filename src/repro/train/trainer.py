@@ -1,0 +1,115 @@
+"""Training loop with checkpoint/restart, NaN guards, straggler watchdog.
+
+Fault-tolerance model (single-controller JAX):
+
+* **Checkpoint/restart** — atomic async checkpoints every ``ckpt_every``
+  steps; on (re)start the trainer resumes from the newest complete
+  checkpoint.  The data pipeline is a pure function of the step index, so
+  restart is bit-exact.  A node failure at scale = kill + reschedule +
+  resume (the standard TPU pod model, where XLA collectives are not
+  survivable and restart-from-checkpoint is the recovery path).
+* **Straggler watchdog** — per-step wall time is tracked against an EWMA;
+  steps slower than ``straggler_factor``x the EWMA are counted and logged.
+  At scale this signal is exported so the scheduler can replace slow hosts;
+  in-process we also trigger an early checkpoint so replacement loses no
+  work.
+* **NaN guard** — non-finite loss skips the optimizer update (params/opt
+  state keep their previous values) and counts; ``max_bad_steps``
+  consecutive bad steps aborts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import ckpt as ckpt_mod
+from repro.data import synthetic_batch
+
+
+@dataclasses.dataclass
+class Trainer:
+    cfg: object                # ModelCfg
+    train_step: object         # from make_train_step (jitted by caller or here)
+    data: object               # SyntheticLMData-like with .batch_at(step)
+    ckpt_dir: str | None = None
+    ckpt_every: int = 200
+    log_every: int = 10
+    straggler_factor: float = 2.0
+    max_bad_steps: int = 10
+    _ewma: float | None = None
+    straggler_events: int = 0
+    bad_steps: int = 0
+
+    def restore_or_init(self, params, opt_state):
+        step0 = 0
+        if self.ckpt_dir:
+            last = ckpt_mod.latest_step(self.ckpt_dir)
+            if last is not None:
+                state = ckpt_mod.restore(
+                    {"params": params, "opt": opt_state}, last, self.ckpt_dir
+                )
+                params, opt_state = state["params"], state["opt"]
+                step0 = last
+                print(f"[trainer] resumed from step {last}")
+        return params, opt_state, step0
+
+    def run(self, params, opt_state, n_steps: int, *, step0: int = 0,
+            extra_batch_fn=None):
+        history = []
+        pending = None
+        for step in range(step0, step0 + n_steps):
+            batch = self.data.batch_at(jnp.asarray(step, jnp.int32))
+            if extra_batch_fn is not None:
+                batch = {**batch, **extra_batch_fn(step)}
+            t0 = time.perf_counter()
+            new_params, new_opt, metrics = self.train_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+
+            # straggler watchdog (the first step is compile-dominated and
+            # excluded from the EWMA)
+            if step > step0:
+                if self._ewma is None:
+                    self._ewma = dt
+                if dt > self.straggler_factor * self._ewma and step > step0 + 2:
+                    self.straggler_events += 1
+                    print(f"[watchdog] step {step} took {dt:.3f}s "
+                          f"(EWMA {self._ewma:.3f}s) — straggler flagged")
+                    if self.ckpt_dir:
+                        pending = ckpt_mod.async_save(
+                            {"params": params, "opt": opt_state}, step, self.ckpt_dir
+                        )
+                else:
+                    self._ewma = 0.9 * self._ewma + 0.1 * dt
+
+            # NaN guard: skip the update
+            if not np.isfinite(loss):
+                self.bad_steps += 1
+                print(f"[guard] non-finite loss at step {step}; update skipped "
+                      f"({self.bad_steps}/{self.max_bad_steps})")
+                if self.bad_steps >= self.max_bad_steps:
+                    raise RuntimeError("too many consecutive non-finite steps")
+                continue
+            self.bad_steps = 0
+            params, opt_state = new_params, new_opt
+
+            if step % self.log_every == 0:
+                print(f"[train] step {step} loss {loss:.4f} "
+                      f"({dt*1000:.0f} ms/step)")
+            history.append(loss)
+
+            if self.ckpt_dir and step > 0 and step % self.ckpt_every == 0:
+                pending = ckpt_mod.async_save(
+                    {"params": params, "opt": opt_state}, step, self.ckpt_dir
+                )
+        if pending is not None:
+            pending.result()
+        if self.ckpt_dir:
+            ckpt_mod.save({"params": params, "opt": opt_state},
+                          step0 + n_steps, self.ckpt_dir)
+        return params, opt_state, history

@@ -1,0 +1,77 @@
+"""2-D (and 1-D) implicit global grids: halo + hide on lower-rank domains."""
+
+from _mp import run
+
+
+def test_2d_diffusion_matches_oracle():
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro.stencil import fd2d as fd
+
+grid = init_global_grid(10, 8, None, dims=(4, 2), dtype=jnp.float64)
+assert grid.ndims == 2 and grid.dims == (4, 2)
+rng = np.random.RandomState(0)
+G0 = rng.rand(*grid.global_shape)
+T = grid.scatter(G0)
+
+def step(T):
+    return T.at[1:-1, 1:-1].set(
+        fd.inn(T) + 0.1 * (fd.d2_xi(T) + fd.d2_yi(T)))
+
+@grid.parallel
+def plain(T):
+    return grid.update_halo(step(T))
+
+@grid.parallel
+def hidden(T):
+    return grid.hide(step, (T,), width=(2, 2))
+
+G = G0.copy()
+Tp, Th = T, T
+for _ in range(6):
+    Tp = plain(Tp)
+    Th = hidden(Th)
+    Gn = G.copy()
+    i = G[1:-1, 1:-1]
+    Gn[1:-1, 1:-1] = i + 0.1 * (
+        G[2:, 1:-1] - 2 * i + G[:-2, 1:-1] + G[1:-1, 2:] - 2 * i + G[1:-1, :-2])
+    G = Gn
+
+np.testing.assert_array_equal(np.asarray(Tp), np.asarray(Th))  # hide bitwise
+err = np.abs(grid.gather(Tp) - G).max()
+assert err < 1e-12, err
+print("OK 2-D")
+""",
+        ndev=8,
+    )
+
+
+def test_1d_periodic_ring():
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+
+grid = init_global_grid(10, None, None, dims=(8,), periodic=(True,),
+                        dtype=jnp.float64)
+assert grid.ndims == 1
+rng = np.random.RandomState(1)
+T = grid.scatter(rng.rand(*grid.global_shape))
+
+@grid.parallel
+def upd(T):
+    return grid.update_halo(T)
+
+T1 = upd(T)
+a = np.asarray(T1)
+n = grid.local_shape[0]
+b = a.reshape(grid.dims[0], n)
+for i in range(grid.dims[0]):
+    np.testing.assert_array_equal(b[i][0], b[(i - 1) % grid.dims[0]][n - 2])
+    np.testing.assert_array_equal(b[i][-1], b[(i + 1) % grid.dims[0]][1])
+print("OK 1-D periodic")
+""",
+        ndev=8,
+    )

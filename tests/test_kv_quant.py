@@ -1,0 +1,45 @@
+"""int8 KV cache: decode output stays close to the bf16-cache decode."""
+
+import dataclasses
+import importlib
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as pm, transformer as tf
+
+
+@pytest.mark.parametrize("mod_name", ["llama3_2_1b", "gemma3_4b"])
+def test_kv_quant_decode_close(mod_name):
+    cfg = importlib.import_module(f"repro.configs.{mod_name}").SMOKE
+    cfg = dataclasses.replace(cfg, dtype="float32", max_seq=24)
+    cfg_q = dataclasses.replace(cfg, kv_quant=True)
+    params = pm.materialize(tf.param_specs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.RandomState(0)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab, (2, 12)), jnp.int32)
+
+    outs = {}
+    for name, c in [("fp", cfg), ("q", cfg_q)]:
+        logits, caches = tf.prefill(params, c, toks[:, :8], cache_len=16,
+                                    remat="none")
+        seq = []
+        for t in range(8, 12):
+            logits, caches = tf.decode_step(
+                params, c, toks[:, t : t + 1], jnp.asarray(t, jnp.int32), caches
+            )
+            seq.append(np.asarray(logits))
+        outs[name] = np.stack(seq)
+    # logits agree to ~int8 quantization noise
+    denom = np.abs(outs["fp"]).max()
+    err = np.abs(outs["q"] - outs["fp"]).max() / denom
+    assert err < 0.08, err
+    # and the argmax token stream is (almost) identical
+    agree = (outs["q"].argmax(-1) == outs["fp"].argmax(-1)).mean()
+    assert agree > 0.9, agree

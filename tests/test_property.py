@@ -1,0 +1,165 @@
+"""Hypothesis property tests on system invariants."""
+
+import os
+import sys
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax
+import jax.numpy as jnp
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nprocs=st.integers(1, 4096),
+    ndims=st.integers(1, 3),
+)
+def test_dims_create_invariants(nprocs, ndims):
+    from repro.core import dims_create
+
+    dims = dims_create(nprocs, ndims)
+    assert len(dims) == ndims
+    assert int(np.prod(dims)) == nprocs
+    assert list(dims) == sorted(dims, reverse=True)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=st.tuples(st.integers(1, 4), st.integers(1, 300)),
+    scale=st.floats(1e-6, 1e6),
+    p=st.sampled_from([1, 4]),
+    data=st.data(),
+)
+def test_quantize_roundtrip_bound(shape, scale, p, data):
+    """|dequant(quant(x)) - x| <= per-block bound, any shape/scale/codebook."""
+    from repro.optim.quant import BLOCK, dequantize, quantize
+
+    rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 31 - 1)))
+    x = jnp.asarray(rng.randn(*shape) * scale, jnp.float32)
+    back = dequantize(quantize(x, p=p), p=p)
+    # per-block error bound: amax * (1/127) for p=1; amax * p/127-ish for p=4
+    xb = np.asarray(x)
+    n = xb.shape[-1]
+    nb = -(-n // BLOCK)
+    pad = np.pad(xb, [(0, 0)] * (xb.ndim - 1) + [(0, nb * BLOCK - n)])
+    blocks = pad.reshape(*xb.shape[:-1], nb, BLOCK)
+    amax = np.abs(blocks).max(-1, keepdims=True)
+    bound = np.repeat(amax * (1.05 / 127 if p == 1 else 4.2 / 127), BLOCK, -1)
+    bound = bound.reshape(*xb.shape[:-1], nb * BLOCK)[..., :n]
+    err = np.abs(np.asarray(back) - xb)
+    assert (err <= bound + 1e-12).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    T=st.sampled_from([16, 32, 48]),
+    window=st.integers(1, 64),
+    seed=st.integers(0, 10_000),
+)
+def test_swa_block_local_equals_dense(T, window, seed):
+    """Block-local sliding-window attention == dense masked softmax."""
+    from repro.kernels.swa import swa_ref
+    from repro.models.attention import _attend_swa, _expand_kv
+
+    rng = np.random.RandomState(seed)
+    B, H, Hkv, D = 1, 2, 1, 8
+    q = jnp.asarray(rng.randn(B, H, T, D), jnp.float32) * 0.4
+    k = jnp.asarray(rng.randn(B, Hkv, T, D), jnp.float32) * 0.4
+    v = jnp.asarray(rng.randn(B, Hkv, T, D), jnp.float32)
+    ref = swa_ref(q, k, v, window=window)
+    got = _attend_swa(
+        q.transpose(0, 2, 1, 3),
+        _expand_kv(k.transpose(0, 2, 1, 3), H),
+        _expand_kv(v.transpose(0, 2, 1, 3), H),
+        window=window, positions=jnp.arange(T), q_chunk=16,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.transpose(0, 2, 1, 3)), np.asarray(ref),
+        rtol=3e-5, atol=3e-5,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    T=st.sampled_from([8, 16, 24]),
+    chunk=st.sampled_from([2, 4, 8, 5]),
+    seed=st.integers(0, 10_000),
+)
+def test_ssd_chunk_invariance(T, chunk, seed):
+    """SSD output must not depend on the chunk size."""
+    from repro.kernels.ssd import ssd_chunked_ref, ssd_ref
+
+    rng = np.random.RandomState(seed)
+    Ba, H, G, N, P = 1, 2, 1, 4, 8
+    x = jnp.asarray(rng.randn(Ba, T, H, P), jnp.float32)
+    dt = jnp.asarray(rng.rand(Ba, T, H) * 0.2 + 0.01, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.rand(H)) - 0.1, jnp.float32)
+    B = jnp.asarray(rng.randn(Ba, T, G, N), jnp.float32) * 0.4
+    C = jnp.asarray(rng.randn(Ba, T, G, N), jnp.float32) * 0.4
+    y0, h0 = ssd_ref(x, dt, A, B, C)
+    c = max(cc for cc in range(1, chunk + 1) if T % cc == 0)
+    y1, h1 = ssd_chunked_ref(x, dt, A, B, C, chunk=c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h0), rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    vocab=st.integers(100, 3000),
+    batch=st.integers(1, 4),
+    seq=st.integers(2, 33),
+    step=st.integers(0, 1 << 20),
+)
+def test_data_pipeline_pure_function_of_step(vocab, batch, seq, step):
+    from repro.data import SyntheticLMData
+
+    d = SyntheticLMData(vocab=vocab, batch=batch, seq=seq, seed=1)
+    b1 = d.batch_at(jnp.asarray(step))
+    b2 = d.batch_at(jnp.asarray(step))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    t = np.asarray(b1["tokens"])
+    assert t.min() >= 0 and t.max() < vocab
+    np.testing.assert_array_equal(
+        np.asarray(b1["labels"])[:, :-1], t[:, 1:]
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(6, 20),
+    width=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+)
+def test_hide_width_invariance_single_device(n, width, seed):
+    """hide_communication result is width-independent (1-device topology)."""
+    from repro.core import CartesianTopology, hide_communication, update_halo
+    from repro.stencil import fd3d as fd
+    from jax.sharding import Mesh
+
+    if n < 2 * (width + 1):
+        return
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1), ("a", "b", "c"))
+    topo = CartesianTopology(mesh=mesh, axes=("a", "b", "c"),
+                             periodic=(True, True, True))
+    rng = np.random.RandomState(seed)
+    A = jnp.asarray(rng.rand(n, n, n), jnp.float32)
+
+    def step(A):
+        return A.at[1:-1, 1:-1, 1:-1].set(
+            fd.inn(A) + 0.1 * (fd.d2_xi(A) + fd.d2_yi(A) + fd.d2_zi(A))
+        )
+
+    def plain(A):
+        return update_halo(topo, step(A), width=1)
+
+    def hidden(A):
+        return hide_communication(topo, step, (A,), width=(width,) * 3)
+
+    f1 = jax.jit(jax.shard_map(plain, mesh=mesh, in_specs=topo.spec(),
+                               out_specs=topo.spec()))
+    f2 = jax.jit(jax.shard_map(hidden, mesh=mesh, in_specs=topo.spec(),
+                               out_specs=topo.spec()))
+    np.testing.assert_array_equal(np.asarray(f1(A)), np.asarray(f2(A)))

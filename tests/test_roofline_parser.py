@@ -1,0 +1,79 @@
+"""HLO roofline parser: while-trip-count FLOPs, collective bytes."""
+
+from _mp import run
+
+
+def test_scan_flops_counts_trips():
+    run(
+        """
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.roofline import HloModule
+
+M, K, TRIPS = 256, 512, 7
+
+def body(x, w):
+    return jnp.tanh(x @ w), None
+
+f = jax.jit(lambda x, ws: jax.lax.scan(body, x, ws)[0])
+c = f.lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+            jax.ShapeDtypeStruct((TRIPS, K, K), jnp.float32)).compile()
+res = HloModule(c.as_text()).analyze()
+expect = TRIPS * 2 * M * K * K
+assert abs(res["flops"] - expect) / expect < 0.01, (res["flops"], expect)
+# XLA's own count misses the trip multiplier (documented limitation)
+assert c.cost_analysis()["flops"] <= expect / (TRIPS - 1)
+print("OK flops", res["flops"])
+""",
+        ndev=1,
+    )
+
+
+def test_unrolled_matches_xla_cost():
+    run(
+        """
+from repro.launch.roofline import HloModule
+
+M, K, N = 128, 256, 512
+f = jax.jit(lambda a, b, c: jnp.tanh(a @ b) @ c)
+comp = f.lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+               jax.ShapeDtypeStruct((K, N), jnp.float32),
+               jax.ShapeDtypeStruct((N, K), jnp.float32)).compile()
+res = HloModule(comp.as_text()).analyze()
+xla = comp.cost_analysis()["flops"]
+expect = 2 * M * K * N + 2 * M * N * K
+assert abs(res["flops"] - expect) / expect < 0.02, (res["flops"], expect)
+assert abs(xla - expect) / expect < 0.02, (xla, expect)
+print("OK", res["flops"], xla)
+""",
+        ndev=1,
+    )
+
+
+def test_collectives_counted_with_trips():
+    run(
+        """
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.roofline import HloModule
+
+mesh = jax.make_mesh((8,), ("m",))
+sh = NamedSharding(mesh, P(None, "m"))
+TRIPS, D = 5, 64
+
+def body(x, w):
+    # w sharded on cols -> psum after matmul
+    y = jax.lax.with_sharding_constraint(x @ w, NamedSharding(mesh, P()))
+    return jnp.tanh(y), None
+
+f = jax.jit(lambda x, ws: jax.lax.scan(body, x, ws)[0],
+            in_shardings=(NamedSharding(mesh, P()), NamedSharding(mesh, P(None, None, "m"))),
+            out_shardings=NamedSharding(mesh, P()))
+c = f.lower(jax.ShapeDtypeStruct((4, D), jnp.float32),
+            jax.ShapeDtypeStruct((TRIPS, D, D), jnp.float32)).compile()
+res = HloModule(c.as_text()).analyze()
+kinds = res["collectives"]
+total = sum(s["count"] for s in kinds.values())
+assert total >= TRIPS, (kinds,)  # at least one collective per trip
+print("OK", kinds)
+""",
+        ndev=8,
+    )
