@@ -4,6 +4,8 @@
     Fig 3  -> weak_scaling_twophase  (two-phase flow, 1 -> 1024 GPUs + CUDA-C ref)
     §2     -> comm_hiding            (@hide_communication on/off)
     §Roofline -> roofline_table      (aggregates the dry-run cells)
+    solvers -> solver_bench          (CG / pseudo-transient / multigrid
+                                      iterations-to-tolerance + time/iter)
 
 ``python -m benchmarks.run`` runs all in quick mode; ``--full`` uses the
 larger measurement sizes.
@@ -17,18 +19,20 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", choices=["heat", "twophase", "hide", "roofline"])
+    ap.add_argument("--only", choices=["heat", "twophase", "hide", "roofline",
+                                       "solvers"])
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (weak_scaling_heat, weak_scaling_twophase,  # noqa
-                            comm_hiding, roofline_table)
+                            comm_hiding, roofline_table, solver_bench)
 
     harnesses = {
         "heat": weak_scaling_heat,
         "twophase": weak_scaling_twophase,
         "hide": comm_hiding,
         "roofline": roofline_table,
+        "solvers": solver_bench,
     }
     if args.only:
         harnesses = {args.only: harnesses[args.only]}

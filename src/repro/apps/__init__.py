@@ -1,6 +1,7 @@
 """The paper's applications: heat diffusion (Fig 1/2), two-phase flow
-(Fig 3), Gross-Pitaevskii (ref [4]) — built on the implicit global grid."""
+(Fig 3), Gross-Pitaevskii (ref [4]), and the variable-coefficient Poisson
+solver showcase — built on the implicit global grid."""
 
-from . import heat3d, twophase, gross_pitaevskii
+from . import heat3d, twophase, gross_pitaevskii, poisson
 
-__all__ = ["heat3d", "twophase", "gross_pitaevskii"]
+__all__ = ["heat3d", "twophase", "gross_pitaevskii", "poisson"]

@@ -260,6 +260,59 @@ class ImplicitGlobalGrid:
             a = np.concatenate(parts, axis=d)
         return jax.device_put(a.astype(np.dtype(self.dtype)), self.sharding)
 
+    # ------------------------------------------------------------------
+    # grid hierarchy (geometric multigrid support)
+    # ------------------------------------------------------------------
+    def can_coarsen(self) -> bool:
+        """True if every local interior extent halves evenly (see coarsen)."""
+        return all(
+            (n - self.overlap) % 2 == 0 and (n - self.overlap) >= 4
+            for n in self.local_shape
+        )
+
+    def coarsen(self) -> "ImplicitGlobalGrid":
+        """One-level-coarser grid on the SAME mesh/topology.
+
+        Each local interior extent (``n - overlap``) halves; the halo width
+        is preserved, so ``update_halo`` works identically at every level.
+        Globally the interior cell count halves per dim (cell-centered
+        coarsening): ``n_g - overlap`` fine interior cells map 2->1 onto
+        ``n_gc - overlap`` coarse cells, which is what the separable
+        full-weighting restriction / trilinear prolongation in
+        :mod:`repro.solvers.multigrid` assume.
+        """
+        coarse = []
+        for n in self.local_shape:
+            inner = n - self.overlap
+            if inner % 2 != 0:
+                raise ValueError(
+                    f"local interior extent {inner} must be even to coarsen"
+                )
+            if inner < 4:
+                raise ValueError(
+                    f"local interior extent {inner} too small to coarsen"
+                )
+            coarse.append(inner // 2 + self.overlap)
+        while len(coarse) < 3:
+            coarse.append(None)  # constructor drops None dims (2-D grids)
+        return ImplicitGlobalGrid(
+            *coarse,
+            overlap=self.overlap,
+            periodic=self.topo.periodic,
+            mesh=self.mesh,
+            axes=self.topo.axes,
+            dtype=self.dtype,
+        )
+
+    def hierarchy(self, max_levels: int | None = None) -> list["ImplicitGlobalGrid"]:
+        """Fine-to-coarse grid hierarchy, coarsening while possible."""
+        levels = [self]
+        while levels[-1].can_coarsen() and (
+            max_levels is None or len(levels) < max_levels
+        ):
+            levels.append(levels[-1].coarsen())
+        return levels
+
     def finalize(self):
         """Paper's ``finalize_global_grid()`` — releases cached executables."""
         self._jit_cache.clear()

@@ -1,0 +1,39 @@
+"""Iterative stencil solvers on the implicit global grid.
+
+The production unit of work for the paper-family apps is not one explicit
+sweep but an *iterative solve to tolerance*: an inner halo-exchange +
+stencil step plus deduplicated global reductions for convergence.  This
+package provides that as a platform:
+
+* :mod:`reductions` — exact global dot/norms inside the shard_map local
+  view (halo-overlap cells masked out), via ``psum``/``pmax``.
+* :func:`cg` — matrix-free (preconditioned) conjugate gradient; the whole
+  Krylov loop is one compiled ``lax.while_loop``.
+* :func:`pseudo_transient` — the accelerated pseudo-transient method
+  (damped second-order dynamics) with device-side residual history.
+* :func:`multigrid_solve` — geometric V-cycles on the
+  :meth:`ImplicitGlobalGrid.hierarchy` of coarsened grids, with
+  distributed full-weighting restriction and trilinear prolongation.
+"""
+
+from .reductions import (
+    dot, norm_l2, norm_linf, owned_mask, interior_mask, solve_mask,
+    dot_g, norm_l2_g, norm_linf_g, field_min, field_max,
+    field_min_g, field_max_g,
+)
+from .cg import cg, SolveInfo
+from .pseudo_transient import pseudo_transient, PTInfo, optimal_parameters
+from .multigrid import (
+    multigrid_solve, poisson_apply, poisson_diag,
+    restrict_full_weighting, prolong_trilinear, coarsen_coefficient,
+)
+
+__all__ = [
+    "dot", "norm_l2", "norm_linf", "owned_mask", "interior_mask", "solve_mask",
+    "dot_g", "norm_l2_g", "norm_linf_g", "field_min", "field_max",
+    "field_min_g", "field_max_g",
+    "cg", "SolveInfo",
+    "pseudo_transient", "PTInfo", "optimal_parameters",
+    "multigrid_solve", "poisson_apply", "poisson_diag",
+    "restrict_full_weighting", "prolong_trilinear", "coarsen_coefficient",
+]

@@ -1,0 +1,129 @@
+"""Accelerated pseudo-transient iteration (damped second-order dynamics).
+
+The paper-family solvers (PseudoTransientDiffusion / Stokes, Räss et al.)
+reach steady state by integrating a *damped wave equation* in pseudo-time
+instead of relaxing the diffusive problem directly:
+
+    dV/dtau = R(u) - nu * V          (pseudo-velocity, damped)
+    du/dtau = V
+
+Discretized, one iteration is
+
+    V <- beta * V + alpha * R(u)
+    u <- u + V
+
+which is exactly the heavy-ball / second-order Richardson method; for an
+SPD operator with spectral bounds ``lam_min <= lam(A) <= lam_max`` the
+optimal coefficients give O(sqrt(kappa)) iterations instead of the
+O(kappa) of first-order pseudo-transient relaxation — the "acceleration"
+of the accelerated PT method.
+
+As in :mod:`repro.solvers.cg`, the whole iteration (stencil, halo
+exchanges, deduplicated global residual norm) is one ``lax.while_loop``
+under one ``shard_map``; the per-iteration residual history is recorded
+device-side into a preallocated buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.grid import ImplicitGlobalGrid
+from . import reductions as red
+from .cg import SolveInfo
+
+
+@dataclasses.dataclass
+class PTInfo(SolveInfo):
+    """Solve outcome plus the per-iteration residual-norm history."""
+
+    residuals: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0)
+    )
+
+
+def optimal_parameters(lam_min: float, lam_max: float) -> tuple[float, float]:
+    """Heavy-ball (alpha, beta) minimizing the spectral contraction rate."""
+    s_min, s_max = float(lam_min) ** 0.5, float(lam_max) ** 0.5
+    alpha = 4.0 / (s_max + s_min) ** 2
+    beta = ((s_max - s_min) / (s_max + s_min)) ** 2
+    return alpha, beta
+
+
+def pseudo_transient(
+    grid: ImplicitGlobalGrid,
+    apply_A,
+    b,
+    x0=None,
+    *,
+    lam_min: float,
+    lam_max: float,
+    tol: float = 1e-6,
+    maxiter: int = 10000,
+    args=(),
+):
+    """Solve SPD ``A x = b`` by accelerated pseudo-transient iteration.
+
+    ``apply_A(u, *args_local)`` is a local-view operator as in
+    :func:`repro.solvers.cg.cg`; ``lam_min``/``lam_max`` bound its spectrum
+    (estimates are fine — the damping stays stable for any
+    ``lam_max >= lam(A)``).  Returns ``(x, PTInfo)`` where
+    ``PTInfo.residuals[k]`` is the deduplicated global residual L2 norm
+    after iteration ``k``.
+    """
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    alpha, beta = optimal_parameters(lam_min, lam_max)
+
+    def _local(b, x, *ops):
+        mask = red.solve_mask(grid, b.dtype)
+        mi = red.interior_mask(grid, dtype=b.dtype)
+
+        bnorm = red.rhs_norm(grid, b, mask)
+
+        r0 = (b - apply_A(x, *ops)) * mi
+        res0 = jnp.sqrt(red.dot(grid, r0, r0, mask))
+        hist0 = jnp.zeros((maxiter,), b.dtype)
+
+        def cond(carry):
+            _, _, _, res, k, _ = carry
+            return (res > tol * bnorm) & (k < maxiter)
+
+        def body(carry):
+            # r (the residual at x) is carried, so the operator — a full
+            # halo exchange + stencil — runs exactly once per iteration.
+            x, v, r, _, k, hist = carry
+            v = beta * v + alpha * r
+            x = x + v
+            r = (b - apply_A(x, *ops)) * mi
+            res = jnp.sqrt(red.dot(grid, r, r, mask))
+            hist = jax.lax.dynamic_update_index_in_dim(hist, res, k, 0)
+            return x, v, r, res, k + 1, hist
+
+        x, _, _, res, k, hist = jax.lax.while_loop(
+            cond, body,
+            (x, jnp.zeros_like(x), r0, res0, jnp.zeros((), jnp.int32), hist0),
+        )
+        return grid.update_halo(x), k, res / bnorm, hist
+
+    key = ("solvers.pt", apply_A, alpha, beta, tol, maxiter,
+           b.shape, b.dtype, tuple((a.shape, a.dtype) for a in args))
+    if key not in grid._jit_cache:
+        sm = jax.shard_map(
+            _local, mesh=grid.mesh,
+            in_specs=(grid.spec, grid.spec) + tuple(grid.spec for _ in args),
+            out_specs=(grid.spec, P(), P(), P()),
+            check_vma=False,
+        )
+        grid._jit_cache[key] = jax.jit(sm)
+    x, k, relres, hist = grid._jit_cache[key](b, x0, *args)
+    k, relres = int(k), float(relres)
+    return x, PTInfo(
+        iterations=k, relres=relres, converged=relres <= tol,
+        residuals=np.asarray(hist)[:k],
+    )

@@ -1,0 +1,128 @@
+"""Physical boundary conditions (core/boundary.py) on multi-rank
+topologies: only physical-boundary ranks touch their faces, inner block
+seams are left to the halo exchange."""
+
+from _mp import run
+
+
+def test_dirichlet_multirank():
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid, boundary
+
+grid = init_global_grid(8, 6, 6, dims=(2, 2, 2), dtype=jnp.float64)
+rng = np.random.RandomState(0)
+G = rng.rand(*grid.global_shape)
+A = grid.scatter(G)
+
+@grid.parallel
+def apply_bc(a):
+    a = boundary.dirichlet(grid.topo, a, 7.5, dim=0)
+    a = boundary.dirichlet(grid.topo, a, -2.0, dim=2)
+    return grid.update_halo(a)
+
+got = grid.gather(apply_bc(A))
+exp = G.copy()
+exp[0, :, :] = 7.5
+exp[-1, :, :] = 7.5
+exp[:, :, 0] = -2.0
+exp[:, :, -1] = -2.0
+np.testing.assert_allclose(got, exp, atol=1e-14)
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_dirichlet_inner_ranks_untouched():
+    """The value mask must key on the rank coordinate: a rank in the middle
+    of the topology has NO physical face along that dim."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid, boundary
+
+grid = init_global_grid(6, 6, 6, dims=(4, 2, 1), dtype=jnp.float64)
+rng = np.random.RandomState(1)
+G = rng.rand(*grid.global_shape)
+A = grid.scatter(G)
+
+@grid.parallel
+def apply_bc(a):
+    return grid.update_halo(boundary.dirichlet(grid.topo, a, 3.25, dim=0))
+
+got = grid.gather(apply_bc(A))
+exp = G.copy()
+exp[0, :, :] = 3.25
+exp[-1, :, :] = 3.25
+# ONLY the two physical faces changed -- interior identical
+np.testing.assert_allclose(got, exp, atol=1e-14)
+np.testing.assert_array_equal(got[1:-1], G[1:-1])
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_neumann0_multirank():
+    """Zero-flux: boundary cells copy the first interior cell, global
+    result matches the single-array oracle on every face."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid, boundary
+
+grid = init_global_grid(8, 8, 6, dims=(2, 2, 2), dtype=jnp.float64)
+rng = np.random.RandomState(2)
+G = rng.rand(*grid.global_shape)
+A = grid.scatter(G)
+
+@grid.parallel
+def apply_bc(a):
+    for d in range(3):
+        a = boundary.neumann0(grid.topo, a, dim=d)
+    return grid.update_halo(a)
+
+got = grid.gather(apply_bc(A))
+exp = G.copy()
+exp[0, :, :] = exp[1, :, :]
+exp[-1, :, :] = exp[-2, :, :]
+exp[:, 0, :] = exp[:, 1, :]
+exp[:, -1, :] = exp[:, -2, :]
+exp[:, :, 0] = exp[:, :, 1]
+exp[:, :, -1] = exp[:, :, -2]
+np.testing.assert_allclose(got, exp, atol=1e-14)
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_bc_composes_with_solver_masks():
+    """BC cells sit exactly on the ring excluded by interior_mask, so a
+    Dirichlet field has zero residual contribution from the ring."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from jax.sharding import PartitionSpec as P
+from repro.core import init_global_grid, boundary
+from repro import solvers
+
+grid = init_global_grid(8, 8, 8, dims=(2, 2, 2), dtype=jnp.float64)
+A = grid.scatter(np.random.RandomState(3).rand(*grid.global_shape))
+
+def ring_energy(a):
+    a = boundary.dirichlet(grid.topo, a, 0.0, dim=0)
+    a = boundary.dirichlet(grid.topo, a, 0.0, dim=1)
+    a = boundary.dirichlet(grid.topo, a, 0.0, dim=2)
+    ring = 1.0 - solvers.interior_mask(grid, dtype=a.dtype)
+    return solvers.norm_l2(grid, a * ring)
+
+sm = jax.shard_map(ring_energy, mesh=grid.mesh, in_specs=(grid.spec,),
+                   out_specs=P(), check_vma=False)
+assert float(jax.jit(sm)(A)) == 0.0
+print("OK")
+""",
+        ndev=8,
+    )
