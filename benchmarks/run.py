@@ -4,8 +4,11 @@
     Fig 3  -> weak_scaling_twophase  (two-phase flow, 1 -> 1024 GPUs + CUDA-C ref)
     §2     -> comm_hiding            (@hide_communication on/off)
     §Roofline -> roofline_table      (aggregates the dry-run cells)
-    solvers -> solver_bench          (CG / pseudo-transient / multigrid
-                                      iterations-to-tolerance + time/iter)
+    solvers -> solver_bench          (CG / MG-preconditioned CG / pseudo-
+                                      transient / multigrid, with and
+                                      without operator comm overlap)
+    stokes  -> stokes_bench          (staggered variable-viscosity Stokes:
+                                      FieldSet CG vs MG-preconditioned CG)
 
 ``python -m benchmarks.run`` runs all in quick mode; ``--full`` uses the
 larger measurement sizes.
@@ -20,12 +23,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", choices=["heat", "twophase", "hide", "roofline",
-                                       "solvers"])
+                                       "solvers", "stokes"])
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (weak_scaling_heat, weak_scaling_twophase,  # noqa
-                            comm_hiding, roofline_table, solver_bench)
+                            comm_hiding, roofline_table, solver_bench,
+                            stokes_bench)
 
     harnesses = {
         "heat": weak_scaling_heat,
@@ -33,6 +37,7 @@ def main() -> None:
         "hide": comm_hiding,
         "roofline": roofline_table,
         "solvers": solver_bench,
+        "stokes": stokes_bench,
     }
     if args.only:
         harnesses = {args.only: harnesses[args.only]}

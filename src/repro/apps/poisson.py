@@ -77,6 +77,12 @@ class Poisson3D:
     def apply_A(self, u, c):
         return poisson_apply(self.grid, u, c, self.spacing)
 
+    def apply_A_overlap(self, u, c):
+        """Same operator with the halo exchange overlapped against the
+        bulk stencil (``hide_apply``); identical arithmetic (shell cells
+        may round differently by ~1 ulp)."""
+        return poisson_apply(self.grid, u, c, self.spacing, hide=True)
+
     def spectral_bounds(self) -> tuple[float, float]:
         """(lam_min, lam_max) estimates for the pseudo-transient solver.
 
@@ -97,19 +103,36 @@ class Poisson3D:
     # solves
     # ------------------------------------------------------------------
     def solve(self, method: str = "cg", tol: float = 1e-6,
-              maxiter: int | None = None, **kw):
-        """Solve with ``method`` in {"cg", "pt", "mg"}; returns (u, info)."""
+              maxiter: int | None = None, overlap: bool = False, **kw):
+        """Solve with ``method`` in {"cg", "mgcg", "pt", "mg"}.
+
+        ``overlap=True`` (cg/mgcg) switches the operator to the
+        communication-hiding application.  Returns ``(u, info)``.
+        """
+        apply_A = self.apply_A_overlap if overlap else self.apply_A
         if method == "cg":
             return solvers.cg(
-                self.grid, self.apply_A, self.b, tol=tol,
+                self.grid, apply_A, self.b, tol=tol,
                 maxiter=maxiter or 2000, args=(self.c,), **kw)
+        if method == "mgcg":
+            if not hasattr(self, "_mg_precond"):
+                self._mg_precond = solvers.CyclePreconditioner(
+                    self.grid, self.spacing)
+            return solvers.cg(
+                self.grid, apply_A, self.b, tol=tol,
+                maxiter=maxiter or 2000, args=(self.c,),
+                apply_M=self._mg_precond, **kw)
         if method == "pt":
             lam_min, lam_max = self.spectral_bounds()
             return solvers.pseudo_transient(
-                self.grid, self.apply_A, self.b, tol=tol,
+                self.grid, apply_A, self.b, tol=tol,
                 maxiter=maxiter or 20000, args=(self.c,),
                 lam_min=lam_min, lam_max=lam_max, **kw)
         if method == "mg":
+            if overlap:
+                raise ValueError(
+                    "overlap=True is not supported for 'mg' (the V-cycle "
+                    "manages its own halo updates)")
             return solvers.multigrid_solve(
                 self.grid, self.c, self.b, self.spacing, tol=tol,
                 maxiter=maxiter or 100, **kw)

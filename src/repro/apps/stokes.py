@@ -1,0 +1,425 @@
+"""3-D variable-viscosity Stokes flow on the staggered grid — the
+paper-family flagship (PseudoTransientStokes analogue).
+
+    -div( eta (grad V) ) + grad P = F      (momentum, faces)
+                           div V = 0       (continuity, centers)
+
+on the MAC staggering of :mod:`repro.fields`: velocity components on
+their faces (``vx``/``vy``/``vz`` on x/y/z-faces), pressure and viscosity
+in the centers, viscosity averaged onto edges for the shear terms.
+Homogeneous Dirichlet velocity on every boundary face; the pressure
+nullspace (constants) is removed by mean-zero projection over the
+pressure unknowns.
+
+Solution strategy — the velocity/pressure block split:
+
+* the velocity block ``A`` (per-component variable-viscosity
+  ``-div(eta grad u)`` over the flux-form stencil, SPD on the unknown
+  faces) is solved matrix-free by :func:`repro.solvers.cg.cg` with the
+  WHOLE staggered system as one Krylov vector (a ``FieldSet`` pytree),
+  optionally preconditioned by a multigrid V-cycle
+  (:class:`repro.solvers.preconditioner.CyclePreconditioner`) — the
+  ROADMAP's ``cg(..., apply_M=one_v_cycle)``;
+* the pressure is advanced by viscosity-scaled Uzawa iteration
+  ``P <- P - theta * eta * div V`` (the classic Schur-complement
+  Richardson step: ``diag(eta)`` is spectrally equivalent to the Stokes
+  Schur complement; the minus sign because the momentum equation carries
+  ``+grad P``, i.e. ``div = -grad^T``), with each velocity solve
+  warm-started from the last.
+
+Validated against an independent NumPy oracle (explicit-slicing stencils,
+per-component masked CG, same Uzawa outer loop) in
+``tests/test_apps.py``; benchmarked (plain vs MG-preconditioned CG on the
+velocity solve) in ``benchmarks/stokes_bench.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P_
+
+from repro.core import init_global_grid
+from repro import fields
+from repro import solvers
+from repro.fields import Field, FieldSet, ops
+from repro.solvers import reductions as red
+
+
+def _roll(a, d: int, s: int):
+    """Value at index ``i`` becomes ``a[i + s]`` (local view; the wrapped
+    planes land only on ring/halo cells, which are masked or refreshed)."""
+    return jnp.roll(a, -s, axis=d)
+
+
+@dataclasses.dataclass
+class StokesInfo:
+    """Outcome of a Stokes solve (host-side scalars)."""
+
+    outer_iterations: int
+    inner_iterations: int      # total CG iterations across outer steps
+    first_inner_iterations: int
+    relres_momentum: float
+    relres_div: float          # final ||div V|| / initial ||div V||
+    converged: bool
+
+
+@dataclasses.dataclass
+class Stokes3D:
+    nx: int = 10            # local extents INCLUDING the halo cells
+    ny: int = 10
+    nz: int = 10
+    lx: float = 1.0         # domain edge length along x (y/z scale with N)
+    eta_amp: float = 0.5    # eta = 1 + amp * (smooth); keep < 1 for SPD
+    theta: float = 1.3      # Uzawa step (times local eta); stable < ~1.8
+    dims: tuple | None = None
+    mesh: object = None     # optional explicit device mesh (subset runs)
+    dtype: object = jnp.float64
+
+    def __post_init__(self):
+        if self.dtype == jnp.float64 and not jax.config.jax_enable_x64:
+            raise ValueError(
+                "Stokes3D(dtype=float64) needs jax x64 enabled first: "
+                'jax.config.update("jax_enable_x64", True) '
+                "(or pass dtype=jnp.float32)"
+            )
+        self.grid = init_global_grid(self.nx, self.ny, self.nz,
+                                     dims=self.dims, mesh=self.mesh,
+                                     dtype=self.dtype)
+        g = self.grid
+        self.dx = self.lx / (g.nx_g() - 1)
+        self.spacing = (self.dx, self.dx, self.dx)
+        N = g.global_shape
+        amp = self.eta_amp
+
+        def eta_fn(ix, iy, iz):
+            x = ix / (N[0] - 1)
+            y = iy / (N[1] - 1)
+            z = iz / (N[2] - 1)
+            return 1.0 + amp * jnp.sin(2 * jnp.pi * x) \
+                * jnp.sin(2 * jnp.pi * y) * jnp.sin(2 * jnp.pi * z)
+
+        # Face-located forcing; face index i sits at (i + 1/2) * h.
+        def bump(x, y, z, cx, cy, cz):
+            return jnp.exp(-((x - cx) ** 2 + (y - cy) ** 2
+                             + (z - cz) ** 2) / 0.05)
+
+        def fx_fn(ix, iy, iz):
+            x = (ix + 0.5) / (N[0] - 1)
+            y = iy / (N[1] - 1)
+            z = iz / (N[2] - 1)
+            return bump(x, y, z, 0.3, 0.5, 0.5)
+
+        def fy_fn(ix, iy, iz):
+            x = ix / (N[0] - 1)
+            y = (iy + 0.5) / (N[1] - 1)
+            z = iz / (N[2] - 1)
+            return 0.3 * jnp.sin(jnp.pi * x) * jnp.cos(jnp.pi * y) \
+                * jnp.sin(jnp.pi * z)
+
+        def fz_fn(ix, iy, iz):
+            x = ix / (N[0] - 1)
+            y = iy / (N[1] - 1)
+            z = (iz + 0.5) / (N[2] - 1)
+            return -bump(x, y, z, 0.6, 0.5, 0.4)
+
+        # from_global_fn evaluates at every local cell incl. halos, so all
+        # of these are halo-consistent by construction.
+        self.eta = fields.from_global_fn(g, eta_fn, "center")
+        self.F = FieldSet(
+            vx=fields.from_global_fn(g, fx_fn, "xface"),
+            vy=fields.from_global_fn(g, fy_fn, "yface"),
+            vz=fields.from_global_fn(g, fz_fn, "zface"),
+        )
+
+    # ------------------------------------------------------------------
+    # operators (local view)
+    # ------------------------------------------------------------------
+    def apply_A(self, V: FieldSet, eta: Field) -> FieldSet:
+        """Velocity block: ``-div(eta grad u)`` per face component.
+
+        Staggered coefficient placement: along the component's own dim the
+        flux coefficient is the CENTER viscosity (the natural point
+        between two like faces); across dims it is the 4-point EDGE
+        average.  Output is zeroed outside each component's unknown faces.
+        """
+        V = fields.update_halo(self.grid, V)
+        h2 = [s ** 2 for s in self.spacing]
+        e0 = eta.data
+        out = {}
+        for name, f in V.items():
+            d = f.stagger_dim
+            u = f.data
+            acc = jnp.zeros_like(u)
+            for dd in range(self.grid.ndims):
+                if dd == d:
+                    ep = _roll(e0, d, +1)
+                    acc += (ep * (_roll(u, d, +1) - u)
+                            - e0 * (u - _roll(u, d, -1))) / h2[d]
+                else:
+                    ee = 0.25 * (e0 + _roll(e0, d, +1) + _roll(e0, dd, +1)
+                                 + _roll(_roll(e0, d, +1), dd, +1))
+                    acc += (ee * (_roll(u, dd, +1) - u)
+                            - _roll(ee, dd, -1) * (u - _roll(u, dd, -1))) \
+                        / h2[dd]
+            out[name] = f.with_data(-acc * f.interior_mask())
+        return FieldSet(**out)
+
+    def _rhs(self, P: Field) -> FieldSet:
+        """Momentum right-hand side ``F - grad P`` (host level)."""
+        if not hasattr(self, "_rhs_fn"):
+            @self.grid.parallel
+            def rhs(F, P):
+                G = ops.grad(P, self.spacing)
+                return FieldSet(vx=F.vx - G.x, vy=F.vy - G.y, vz=F.vz - G.z)
+
+            self._rhs_fn = rhs
+        return self._rhs_fn(self.F, P)
+
+    # ------------------------------------------------------------------
+    # velocity solve (the flagship CG workload)
+    # ------------------------------------------------------------------
+    def _precond(self):
+        if not hasattr(self, "_mg_precond"):
+            self._mg_precond = solvers.CyclePreconditioner(
+                self.grid, self.spacing)
+        return self._mg_precond
+
+    def velocity_solve(self, P: Field | None = None, x0: FieldSet | None = None,
+                       precond: bool = True, tol: float = 1e-8,
+                       maxiter: int = 2000):
+        """Solve ``A V = F - grad P`` for the staggered velocity system.
+
+        One :func:`repro.solvers.cg.cg` call on the whole ``FieldSet``;
+        ``precond`` switches the multigrid V-cycle preconditioner on the
+        center viscosity (each face component preconditioned by the
+        spectrally equivalent cell-centered cycle).
+        """
+        b = self._rhs(P) if P is not None else self.F
+        return solvers.cg(
+            self.grid, self.apply_A, b, x0=x0, tol=tol, maxiter=maxiter,
+            apply_M=self._precond() if precond else None,
+            args=(self.eta,))
+
+    # ------------------------------------------------------------------
+    # pressure update (viscosity-scaled Uzawa step) + diagnostics
+    # ------------------------------------------------------------------
+    def _pressure_update(self, P: Field, V: FieldSet):
+        g = self.grid
+        key = ("apps.stokes.pupdate", self.theta, P.dtype)
+        if key not in g._jit_cache:
+            def upd(P, V, eta):
+                mc = fields.interior_mask(g, "center", P.dtype)
+                ms = fields.solve_mask(g, "center", P.dtype)
+                divV = ops.div(V, self.spacing).data
+                dn = jnp.sqrt(red.psum(g.topo, jnp.sum(divV ** 2 * ms)))
+                P2 = (P.data - self.theta * eta.data * divV) * mc
+                mean = red.psum(g.topo, jnp.sum(P2 * ms)) \
+                    / red.psum(g.topo, jnp.sum(ms))
+                P2 = (P2 - mean) * mc
+                return P.with_data(g.update_halo(P2)), dn
+
+            sm = jax.shard_map(
+                upd, mesh=g.mesh,
+                in_specs=(g.spec, g.spec, g.spec),
+                out_specs=(g.spec, P_()),
+                check_vma=False,
+            )
+            g._jit_cache[key] = jax.jit(sm)
+        return g._jit_cache[key](P, V, self.eta)
+
+    def residuals(self, V: FieldSet, P: Field) -> tuple[float, float]:
+        """(relative momentum residual, absolute ||div V||) over unknowns."""
+        g = self.grid
+        key = ("apps.stokes.residuals", P.dtype)
+        if key not in g._jit_cache:
+            def res(V, P, F, eta):
+                masks = fields.solve_mask_tree(g, F)
+                ms = fields.solve_mask(g, "center", P.dtype)
+                G = ops.grad(P, self.spacing)
+                AV = self.apply_A(V, eta)
+                r = FieldSet(vx=F.vx - AV.vx - G.x,
+                             vy=F.vy - AV.vy - G.y,
+                             vz=F.vz - AV.vz - G.z)
+                rn = jnp.sqrt(red.tree_dot(g, r, r, masks))
+                fn = jnp.sqrt(red.tree_dot(g, F, F, masks))
+                divV = ops.div(V, self.spacing).data
+                dn = jnp.sqrt(red.psum(g.topo, jnp.sum(divV ** 2 * ms)))
+                return rn / fn, dn
+
+            sm = jax.shard_map(
+                res, mesh=g.mesh,
+                in_specs=(g.spec, g.spec, g.spec, g.spec),
+                out_specs=(P_(), P_()),
+                check_vma=False,
+            )
+            g._jit_cache[key] = jax.jit(sm)
+        rm, dn = g._jit_cache[key](V, P, self.F, self.eta)
+        return float(rm), float(dn)
+
+    # ------------------------------------------------------------------
+    # full solve: Uzawa outer loop
+    # ------------------------------------------------------------------
+    def solve(self, tol: float = 1e-8, outer_maxiter: int = 400,
+              inner_tol: float | None = None, precond: bool = True):
+        """Solve the full Stokes system.  Returns ``(V, P, StokesInfo)``.
+
+        Converges when ``||div V||`` has dropped by ``tol`` relative to
+        the first outer iterate (each velocity solve is converged to
+        ``inner_tol``, default ``tol``, warm-started from the last).
+        """
+        inner_tol = tol if inner_tol is None else inner_tol
+        V = FieldSet(vx=fields.zeros(self.grid, "xface", self.dtype),
+                     vy=fields.zeros(self.grid, "yface", self.dtype),
+                     vz=fields.zeros(self.grid, "zface", self.dtype))
+        P = fields.zeros(self.grid, "center", self.dtype)
+        inner_total = first_inner = 0
+        d0 = dn = None
+        k = 0
+        for k in range(1, outer_maxiter + 1):
+            V, info = self.velocity_solve(P=P, x0=V, precond=precond,
+                                          tol=inner_tol)
+            inner_total += info.iterations
+            if k == 1:
+                first_inner = info.iterations
+            P, dn = self._pressure_update(P, V)
+            dn = float(dn)
+            if d0 is None:
+                d0 = dn if dn > 0 else 1.0
+            if dn <= tol * d0:
+                break
+        rm, _ = self.residuals(V, P)
+        relres_div = dn / d0
+        return V, P, StokesInfo(
+            outer_iterations=k, inner_iterations=inner_total,
+            first_inner_iterations=first_inner,
+            relres_momentum=rm, relres_div=relres_div,
+            converged=relres_div <= tol,
+        )
+
+    # ------------------------------------------------------------------
+    # NumPy oracle — independent explicit-slicing implementation
+    # ------------------------------------------------------------------
+    def oracle(self, tol: float = 1e-10, inner_tol: float = 1e-12,
+               outer_maxiter: int = 5000):
+        """Solve the same discrete system in NumPy on the global grid.
+
+        Returns ``(Vx, Vy, Vz, P)`` as full global-shape arrays (dead
+        planes zero, P mean-zero over its unknowns).
+        """
+        g = self.grid
+        N = g.global_shape
+        h2 = [float(s) ** 2 for s in self.spacing]
+        eta = fields.gather(self.eta).astype(np.float64)
+
+        def pad_valid(f):
+            sd = f.stagger_dim
+            pad = [(0, 1) if d == sd else (0, 0) for d in range(3)]
+            return np.pad(fields.gather(f).astype(np.float64), pad)
+
+        F = [pad_valid(self.F.vx), pad_valid(self.F.vy), pad_valid(self.F.vz)]
+
+        # Unknown regions: component d spans [1, N-2) along d (faces),
+        # [1, N-1) across; pressure spans [1, N-1) everywhere.
+        def region(d=None):
+            sl = [slice(1, n - 1) for n in N]
+            if d is not None:
+                sl[d] = slice(1, N[d] - 2)
+            return tuple(sl)
+
+        def shift(a, reg, axis, s):
+            sl = list(reg)
+            r = sl[axis]
+            sl[axis] = slice(r.start + s, r.stop + s)
+            return a[tuple(sl)]
+
+        # Edge viscosities (full arrays, dead planes zero).
+        def edge_eta(d, dd):
+            ee = np.zeros(N)
+            dst = [slice(None)] * 3
+            src = []
+            for bits in ((0, 0), (1, 0), (0, 1), (1, 1)):
+                sl = [slice(None)] * 3
+                sl[d] = slice(bits[0], N[d] - 1 + bits[0])
+                sl[dd] = slice(bits[1], N[dd] - 1 + bits[1])
+                src.append(eta[tuple(sl)])
+            dst[d] = slice(0, -1)
+            dst[dd] = slice(0, -1)
+            ee[tuple(dst)] = 0.25 * sum(src)
+            return ee
+
+        ee_cache = {(d, dd): edge_eta(d, dd)
+                    for d in range(3) for dd in range(3) if d != dd}
+
+        def A_np(u, d):
+            reg = region(d)
+            u0 = u[reg]
+            acc = np.zeros_like(u0)
+            for dd in range(3):
+                if dd == d:
+                    acc += (shift(eta, reg, d, 1) * (shift(u, reg, d, 1) - u0)
+                            - eta[reg] * (u0 - shift(u, reg, d, -1))) / h2[d]
+                else:
+                    ee = ee_cache[(d, dd)]
+                    acc += (ee[reg] * (shift(u, reg, dd, 1) - u0)
+                            - shift(ee, reg, dd, -1)
+                            * (u0 - shift(u, reg, dd, -1))) / h2[dd]
+            out = np.zeros(N)
+            out[reg] = -acc
+            return out
+
+        def grad_np(P, d):
+            reg = region(d)
+            out = np.zeros(N)
+            out[reg] = (shift(P, reg, d, 1) - P[reg]) / self.spacing[d]
+            return out
+
+        def div_np(V):
+            reg = region()
+            out = np.zeros(N)
+            out[reg] = sum(
+                (V[d][reg] - shift(V[d], reg, d, -1)) / self.spacing[d]
+                for d in range(3))
+            return out
+
+        def cg_np(apply_A, b, x, reg, tol, maxiter=20000):
+            r = np.zeros(N)
+            r[reg] = (b - apply_A(x))[reg]
+            p = r.copy()
+            rs = float((r[reg] ** 2).sum())
+            bn = float((b[reg] ** 2).sum()) ** 0.5 or 1.0
+            for _ in range(maxiter):
+                if rs ** 0.5 <= tol * bn:
+                    break
+                Ap = apply_A(p)
+                alpha = rs / float((p[reg] * Ap[reg]).sum())
+                x = x + alpha * p
+                r[reg] -= alpha * Ap[reg]
+                rs_new = float((r[reg] ** 2).sum())
+                p = r + (rs_new / rs) * p
+                rs = rs_new
+            return x
+
+        V = [np.zeros(N) for _ in range(3)]
+        P = np.zeros(N)
+        regc = region()
+        d0 = None
+        for _ in range(outer_maxiter):
+            for d in range(3):
+                rhs = F[d] - grad_np(P, d)
+                V[d] = cg_np(lambda u, d=d: A_np(u, d), rhs, V[d],
+                             region(d), inner_tol)
+            divV = div_np(V)
+            dn = float((divV[regc] ** 2).sum()) ** 0.5
+            if d0 is None:
+                d0 = dn if dn > 0 else 1.0
+            P2 = np.zeros(N)
+            P2[regc] = P[regc] - self.theta * eta[regc] * divV[regc]
+            P2[regc] -= P2[regc].mean()
+            P = P2
+            if dn <= tol * d0:
+                break
+        return V[0], V[1], V[2], P

@@ -3,6 +3,14 @@
 Non-periodic halo updates leave the outermost cells of physical-boundary
 ranks untouched; these helpers set them.  All functions run inside
 ``shard_map`` and mask by rank coordinate so inner ranks are unaffected.
+
+Location-awareness (``repro.fields`` shape-uniform staggering): for a
+field staggered ALONG ``dim``, the physical boundary faces are the global
+first face ``0`` and last valid face ``N - 2`` — i.e. local positions
+``[0, w)`` on the first rank and ``[n - 1 - w, n - 1)`` on the last rank,
+with the dead plane ``n - 1`` zeroed.  Pass ``staggered=True`` to apply
+boundary values there instead of at the center ring.  (A field staggered
+along a *different* dim uses the plain center convention for ``dim``.)
 """
 
 from __future__ import annotations
@@ -13,23 +21,53 @@ from .halo import _slc
 from .topology import CartesianTopology
 
 
-def dirichlet(topo: CartesianTopology, A, value, dim: int, width: int = 1):
-    """Set the physical low/high faces along ``dim`` to ``value``."""
-    nd, n = A.ndim, A.shape[dim]
-    lo = jnp.where(topo.is_first(dim), jnp.full_like(A[_slc(nd, dim, 0, width)], value), A[_slc(nd, dim, 0, width)])
-    hi = jnp.where(topo.is_last(dim), jnp.full_like(A[_slc(nd, dim, n - width, n)], value), A[_slc(nd, dim, n - width, n)])
-    A = A.at[_slc(nd, dim, 0, width)].set(lo)
-    A = A.at[_slc(nd, dim, n - width, n)].set(hi)
+def _set_lo_hi(topo: CartesianTopology, A, dim, lo_dst, hi_dst, lo_val, hi_val):
+    nd = A.ndim
+    lo = jnp.where(topo.is_first(dim), lo_val, A[_slc(nd, dim, *lo_dst)])
+    hi = jnp.where(topo.is_last(dim), hi_val, A[_slc(nd, dim, *hi_dst)])
+    A = A.at[_slc(nd, dim, *lo_dst)].set(lo)
+    A = A.at[_slc(nd, dim, *hi_dst)].set(hi)
     return A
 
 
-def neumann0(topo: CartesianTopology, A, dim: int, width: int = 1):
-    """Zero-flux: copy the first interior cell into the boundary cells."""
+def _zero_dead_plane(topo: CartesianTopology, A, dim: int):
+    """Zero the staggered dead plane (last rank's trailing face slot)."""
     nd, n = A.ndim, A.shape[dim]
-    lo_src = jnp.broadcast_to(A[_slc(nd, dim, width, width + 1)], A[_slc(nd, dim, 0, width)].shape)
-    hi_src = jnp.broadcast_to(A[_slc(nd, dim, n - width - 1, n - width)], A[_slc(nd, dim, n - width, n)].shape)
-    lo = jnp.where(topo.is_first(dim), lo_src, A[_slc(nd, dim, 0, width)])
-    hi = jnp.where(topo.is_last(dim), hi_src, A[_slc(nd, dim, n - width, n)])
-    A = A.at[_slc(nd, dim, 0, width)].set(lo)
-    A = A.at[_slc(nd, dim, n - width, n)].set(hi)
+    dead = jnp.where(topo.is_last(dim),
+                     jnp.zeros_like(A[_slc(nd, dim, n - 1, n)]),
+                     A[_slc(nd, dim, n - 1, n)])
+    return A.at[_slc(nd, dim, n - 1, n)].set(dead)
+
+
+def dirichlet(topo: CartesianTopology, A, value, dim: int, width: int = 1,
+              staggered: bool = False):
+    """Set the physical low/high boundary planes along ``dim`` to ``value``.
+
+    ``staggered=True``: ``A`` is face-staggered along ``dim``; the value
+    lands on boundary faces ``[0, w)`` / ``[N-1-w, N-1)`` and the dead
+    plane is zeroed.
+    """
+    nd, n = A.ndim, A.shape[dim]
+    hi_end = n - 1 if staggered else n
+    lo_dst, hi_dst = (0, width), (hi_end - width, hi_end)
+    full = lambda dst: jnp.full_like(A[_slc(nd, dim, *dst)], value)
+    A = _set_lo_hi(topo, A, dim, lo_dst, hi_dst, full(lo_dst), full(hi_dst))
+    if staggered:
+        A = _zero_dead_plane(topo, A, dim)
+    return A
+
+
+def neumann0(topo: CartesianTopology, A, dim: int, width: int = 1,
+             staggered: bool = False):
+    """Zero-flux: copy the first interior plane into the boundary planes."""
+    nd, n = A.ndim, A.shape[dim]
+    hi_end = n - 1 if staggered else n
+    lo_dst, hi_dst = (0, width), (hi_end - width, hi_end)
+    lo_src = jnp.broadcast_to(A[_slc(nd, dim, width, width + 1)],
+                              A[_slc(nd, dim, *lo_dst)].shape)
+    hi_src = jnp.broadcast_to(A[_slc(nd, dim, hi_end - width - 1, hi_end - width)],
+                              A[_slc(nd, dim, *hi_dst)].shape)
+    A = _set_lo_hi(topo, A, dim, lo_dst, hi_dst, lo_src, hi_src)
+    if staggered:
+        A = _zero_dead_plane(topo, A, dim)
     return A

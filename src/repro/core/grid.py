@@ -177,27 +177,37 @@ class ImplicitGlobalGrid:
         """Decorator: run ``fn`` in the shard_map local view (jitted).
 
         Positional args that look like grid fields (trailing dims equal the
-        stacked global shape) are sharded over the grid axes; everything
-        else is replicated.  All outputs are treated as grid fields.
+        stacked global shape) are sharded over the grid axes; staggered
+        pytrees (``repro.fields`` Field / FieldSet, marked by
+        ``_staggered_tree``) are sharded leaf-wise via a spec prefix;
+        everything else is replicated.  All outputs are treated as grid
+        fields (or pytrees thereof).
         """
 
         @functools.wraps(fn)
         def wrapper(*args):
             args = tuple(
-                a if hasattr(a, "ndim") else jnp.asarray(a) for a in args
-            )
-            is_field = tuple(
-                a.ndim >= self.ndims and a.shape[-self.ndims:] == self.stacked_shape
+                a if hasattr(a, "ndim") or getattr(a, "_staggered_tree", False)
+                else jnp.asarray(a)
                 for a in args
             )
-            key = (fn, is_field, tuple(a.ndim for a in args))
+
+            def spec_of(a):
+                if getattr(a, "_staggered_tree", False) and not hasattr(a, "ndim"):
+                    return self.spec  # pytree prefix: every leaf a grid field
+                if a.ndim >= self.ndims and a.shape[-self.ndims:] == self.stacked_shape:
+                    return P(*([None] * (a.ndim - self.ndims)), *self.topo.axes)
+                return P()
+
+            def sig_of(a):
+                if getattr(a, "_staggered_tree", False) and not hasattr(a, "ndim"):
+                    return jax.tree_util.tree_structure(a)
+                return (a.ndim, a.shape[-self.ndims:] == self.stacked_shape
+                        if a.ndim >= self.ndims else False)
+
+            key = (fn, tuple(sig_of(a) for a in args))
             if key not in self._jit_cache:
-                in_specs = tuple(
-                    P(*([None] * (a.ndim - self.ndims)), *self.topo.axes)
-                    if f
-                    else P()
-                    for a, f in zip(args, is_field)
-                )
+                in_specs = tuple(spec_of(a) for a in args)
                 # check_vma=False: pallas_call out_shapes carry no vma info
                 sm = jax.shard_map(
                     fn, mesh=self.mesh, in_specs=in_specs, out_specs=self.spec,

@@ -53,19 +53,44 @@ def _update_one_dim(topo: CartesianTopology, A: jax.Array, gdim: int, adim: int,
     return A
 
 
+# Staggering dim per field location (mirrors repro.fields; kept here so the
+# core stays import-free of the fields subsystem).
+_STAGGER_DIM = {None: None, "center": None, "xface": 0, "yface": 1, "zface": 2}
+
+
 def update_halo(
     topo: CartesianTopology,
     *arrays: jax.Array,
     width: int = 1,
     dims: Sequence[int] | None = None,
+    locations: Sequence[str | None] | None = None,
 ):
     """Exchange halos of ``arrays`` (local view, inside shard_map).
 
     ``width`` is the halo width h (the paper's ``overlap = 2h``).  Returns
     updated arrays (single array if one was passed).  Grid dimensions are
     the trailing ``topo.ndims`` axes of each array.
+
+    ``locations`` optionally gives each array's staggering location
+    (``repro.fields`` convention: ``"center"``/``"xface"``/...).  Under
+    shape-uniform staggering, face index ``i`` is aligned with center
+    index ``i``, so the exchange mechanics are location-independent; the
+    one genuine difference is periodicity: a face field staggered along a
+    periodic dim would need its wraparound shifted past the dead plane,
+    which is not supported and rejected here.
     """
     dims = tuple(dims) if dims is not None else tuple(range(topo.ndims))
+    if locations is not None and len(locations) != len(arrays):
+        raise ValueError(
+            f"got {len(locations)} locations for {len(arrays)} arrays")
+    for loc in locations or ():
+        if loc not in _STAGGER_DIM:
+            raise ValueError(f"unknown staggering location {loc!r}")
+        sd = _STAGGER_DIM[loc]
+        if sd is not None and sd in dims and topo.periodic[sd]:
+            raise ValueError(
+                f"halo exchange of a {loc!r} field along periodic dim {sd} "
+                "is not supported (wraparound would cross the dead plane)")
     out = []
     for A in arrays:
         off = A.ndim - topo.ndims

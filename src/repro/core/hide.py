@@ -106,3 +106,66 @@ def hide_communication(
         outs[k] = outs[k].at[sl_global].set(int_out[k][sl_local])
 
     return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+def hide_apply(
+    topo: CartesianTopology,
+    op_fn: Callable,
+    u: jax.Array,
+    *extra: jax.Array,
+    halo: int = 1,
+):
+    """Operator application with overlapped halo exchange (local view).
+
+    Semantically IDENTICAL to ``op_fn(update_halo(topo, u, width=halo),
+    *extra)`` — same arithmetic on the same values; the recomputed shell
+    cells may differ by ~1 ulp where the compiler vectorizes the
+    differently-shaped slab computation differently.  This is the dual of
+    :func:`hide_communication`: a solver's operator needs FRESH halos of
+    its *input* before the stencil, instead of exchanging its output
+    afterwards.  The dependence structure exposed to the scheduler:
+
+    1. the ``ppermute`` operands are slabs of ``u`` — the exchange starts
+       immediately;
+    2. the stencil is applied to ``u`` with its *stale* halos over the
+       whole block — independent of the collectives, so XLA can run this
+       (the bulk of the work) between ``collective-permute-start/-done``;
+       only the inner shell of cells adjacent to the halos is wrong;
+    3. after the exchange, that thin shell is recomputed from slabs of
+       the halo-updated input and overwritten.
+
+    Requirements on ``op_fn(u, *extra) -> out``: shape-polymorphic, writes
+    each output cell of the all-dims interior ``[h, n - h)`` from the
+    ``(2h + 1)``-neighborhood of its input cell, zeroes the outer ring,
+    and ``extra`` operands (e.g. coefficient fields) are already
+    halo-consistent.  All :mod:`repro.solvers` operators qualify.
+    """
+    h = int(halo)
+    nd = u.ndim
+    if nd != topo.ndims:
+        raise ValueError(
+            f"hide_apply expects grid-rank arrays ({topo.ndims}-D), got {nd}-D")
+    for d in range(nd):
+        if u.shape[d] < 4 * h:
+            raise ValueError(
+                f"local extent {u.shape[d]} too small for halo {h} overlap")
+
+    u2 = update_halo(topo, u, width=h)
+    out = op_fn(u, *extra)  # stale halos: wrong only on the inner shell
+    for d in range(nd):
+        if topo.dims[d] == 1 and not topo.periodic[d]:
+            # No exchange along d: u2 == u there, and every cell needing
+            # fresh halos of OTHER dims lies in those dims' shells.
+            continue
+        n = u.shape[d]
+        # Recompute output cells [h, 2h) / [n-2h, n-h) along d (full extent
+        # of the other dims, so corner/edge cells pick up fresh halos of
+        # every dim in whichever pass reaches them first — same values).
+        lo_in = _slc(nd, d, 0, 3 * h)
+        hi_in = _slc(nd, d, n - 3 * h, n)
+        lo = op_fn(u2[lo_in], *(e[lo_in] for e in extra))
+        hi = op_fn(u2[hi_in], *(e[hi_in] for e in extra))
+        sl = _slc(nd, d, h, 2 * h)  # slab-local valid rows (both slabs)
+        out = out.at[_slc(nd, d, h, 2 * h)].set(lo[sl])
+        out = out.at[_slc(nd, d, n - 2 * h, n - h)].set(hi[sl])
+    return out

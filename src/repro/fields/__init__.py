@@ -1,0 +1,35 @@
+"""Staggered-field subsystem on the implicit global grid.
+
+* :class:`Field` — a grid array tagged with its staggering location
+  (``center``, ``xface``, ``yface``, ``zface``); shape-uniform storage so
+  every location shares the halo machinery and sharding of center fields.
+* :class:`FieldSet` — a named pytree of Fields; whole staggered systems
+  flow through ``grid.parallel``, ``grid.hide``, the solvers, and
+  checkpointing as one value.
+* :mod:`repro.fields.ops` — location-aware interpolation / finite
+  differences between locations (``fd3d`` style).
+* masks — deduplicated ownership / validity / Dirichlet-unknown masks per
+  location, for exact global reductions over staggered unknowns.
+
+See :mod:`repro.apps.stokes` for the flagship staggered application.
+"""
+
+from .field import (
+    LOCATIONS, Field, FieldSet,
+    face_location, stagger_dim, valid_count, valid_global_shape,
+    valid_mask, owned_mask, interior_mask, solve_mask,
+    solve_mask_tree, interior_mask_tree, map_fields,
+    update_halo, hide_step,
+    zeros, from_global_fn, gather, scatter,
+)
+from . import ops
+
+__all__ = [
+    "LOCATIONS", "Field", "FieldSet",
+    "face_location", "stagger_dim", "valid_count", "valid_global_shape",
+    "valid_mask", "owned_mask", "interior_mask", "solve_mask",
+    "solve_mask_tree", "interior_mask_tree", "map_fields",
+    "update_halo", "hide_step",
+    "zeros", "from_global_fn", "gather", "scatter",
+    "ops",
+]

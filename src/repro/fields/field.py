@@ -1,0 +1,431 @@
+"""Staggered fields on the implicit global grid.
+
+The paper family targets *staggered* grids: pressure-like scalars live in
+cell centers, velocities/fluxes on cell faces.  This module makes the
+staggering location a first-class property of a field instead of a
+convention every app hand-rolls.
+
+Storage convention (shape-uniform staggering)
+---------------------------------------------
+A :class:`Field` at any location stores an array of the SAME stacked/local
+shape as a center field; the location changes the *interpretation*:
+
+* ``center``: entry ``i`` sits at node ``i`` (coordinate ``i * h``).
+* ``xface`` (resp. ``yface``/``zface``): entry ``i`` along the staggered
+  dim sits at the face ``i + 1/2`` *between* centers ``i`` and ``i + 1``
+  (coordinate ``(i + 1/2) * h``); the trailing plane ``i = N - 1`` has no
+  face and is a masked **dead plane** (kept zero).
+
+Because face index ``i`` is aligned with center index ``i``, neighboring
+blocks share face planes exactly where they share center planes, so the
+one :func:`repro.core.halo.update_halo` works verbatim for every location,
+sharding specs are identical, and a :class:`FieldSet` pytree flows through
+``grid.parallel``, ``grid.hide``, the solvers, and checkpointing
+unchanged.  What IS location-dependent is the bookkeeping, provided here:
+
+* global/local shape arithmetic (``N - 1`` valid faces per staggered dim);
+* deduplicated ownership / validity / Dirichlet-unknown masks;
+* gather/scatter of the valid (deduplicated, dead-plane-free) array;
+* boundary conditions (a face field's boundary faces along its staggered
+  dim are global indices ``0`` and ``N - 2``, not ``0`` and ``N - 1``).
+
+Fields are registered pytrees whose single leaf is the data array; the
+grid and location ride along as static aux data.  ``jax.tree.map`` over
+Fields therefore operates on raw arrays and rebuilds Fields — which is
+exactly what lets :func:`repro.solvers.cg` treat a whole staggered system
+as one unknown vector.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import halo as _halo
+from repro.core import hide as _hide
+from repro.core.grid import ImplicitGlobalGrid
+from repro.solvers import reductions as red
+
+LOCATIONS = ("center", "xface", "yface", "zface")
+_STAGGER_DIM = {"center": None, "xface": 0, "yface": 1, "zface": 2}
+
+
+def stagger_dim(loc: str) -> int | None:
+    """Grid dimension a location is staggered along (None for center)."""
+    try:
+        return _STAGGER_DIM[loc]
+    except KeyError:
+        raise ValueError(f"unknown location {loc!r}; expected one of {LOCATIONS}")
+
+
+def face_location(dim: int) -> str:
+    """Face location staggered along grid dimension ``dim``."""
+    return ("xface", "yface", "zface")[dim]
+
+
+def valid_count(grid: ImplicitGlobalGrid, loc: str, dim: int) -> int:
+    """Number of valid global points along ``dim`` for a field at ``loc``."""
+    n = grid.n_g(dim)
+    return n - 1 if stagger_dim(loc) == dim else n
+
+
+def valid_global_shape(grid: ImplicitGlobalGrid, loc: str) -> tuple[int, ...]:
+    """Deduplicated global shape of the valid points of a field at ``loc``."""
+    return tuple(valid_count(grid, loc, d) for d in range(grid.ndims))
+
+
+@jax.tree_util.register_pytree_node_class
+class Field:
+    """A grid array tagged with its staggering location.
+
+    ``data`` is either the host-level stacked array (``grid.stacked_shape``)
+    or, inside ``shard_map``, the local block — Field is a thin tag either
+    way.  Supports elementwise arithmetic with scalars, arrays, and
+    same-location Fields.
+    """
+
+    _staggered_tree = True  # duck-typed marker read by grid.parallel
+
+    def __init__(self, grid: ImplicitGlobalGrid, data, loc: str = "center"):
+        sd = stagger_dim(loc)
+        if sd is not None and sd >= grid.ndims:
+            raise ValueError(f"location {loc!r} needs grid dim {sd}, "
+                             f"but grid is {grid.ndims}-D")
+        self.grid = grid
+        self.data = data
+        self.loc = loc
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten(self):
+        return (self.data,), (self.grid, self.loc)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        obj.grid, obj.loc = aux
+        obj.data = children[0]
+        return obj
+
+    # -- array-likeness (lets grid.parallel treat a Field as a field) ---
+    @property
+    def ndim(self):
+        return self.data.ndim
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def stagger_dim(self) -> int | None:
+        return stagger_dim(self.loc)
+
+    @property
+    def valid_global_shape(self) -> tuple[int, ...]:
+        return valid_global_shape(self.grid, self.loc)
+
+    def with_data(self, data) -> "Field":
+        return Field(self.grid, data, self.loc)
+
+    def __repr__(self):
+        return f"Field({self.loc}, shape={tuple(self.data.shape)})"
+
+    # -- location-aware masks (local view; see module-level functions) --
+    # Methods so that repro.solvers can dispatch on Fields by duck typing
+    # without importing this package (fields imports solvers.reductions).
+    def valid_mask(self):
+        return valid_mask(self.grid, self.loc, self.dtype)
+
+    def owned_mask(self):
+        return owned_mask(self.grid, self.loc, self.dtype)
+
+    def interior_mask(self):
+        return interior_mask(self.grid, self.loc, self.dtype)
+
+    def solve_mask(self):
+        return solve_mask(self.grid, self.loc, self.dtype)
+
+    # -- elementwise arithmetic -----------------------------------------
+    def _coerce(self, other):
+        if isinstance(other, Field):
+            if other.loc != self.loc:
+                raise ValueError(
+                    f"location mismatch: {self.loc} vs {other.loc} "
+                    "(interpolate with repro.fields.ops first)")
+            return other.data
+        return other
+
+    def __add__(self, o):
+        return self.with_data(self.data + self._coerce(o))
+
+    __radd__ = __add__
+
+    def __sub__(self, o):
+        return self.with_data(self.data - self._coerce(o))
+
+    def __rsub__(self, o):
+        return self.with_data(self._coerce(o) - self.data)
+
+    def __mul__(self, o):
+        return self.with_data(self.data * self._coerce(o))
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, o):
+        return self.with_data(self.data / self._coerce(o))
+
+    def __neg__(self):
+        return self.with_data(-self.data)
+
+
+@jax.tree_util.register_pytree_node_class
+class FieldSet:
+    """An ordered, named collection of Fields — one pytree node.
+
+    The unit a whole staggered system travels in: ``FieldSet(vx=..., vy=...,
+    vz=...)`` passes through ``grid.parallel``, ``jax.tree.map``, the
+    solvers, and checkpointing as a single argument.
+    """
+
+    _staggered_tree = True
+
+    def __init__(self, **fields):
+        self._fields = dict(fields)
+
+    def tree_flatten(self):
+        return tuple(self._fields.values()), tuple(self._fields.keys())
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        obj = object.__new__(cls)
+        obj._fields = dict(zip(keys, children))
+        return obj
+
+    def __getattr__(self, name):
+        fields = object.__getattribute__(self, "_fields")
+        if name in fields:
+            return fields[name]
+        raise AttributeError(name)
+
+    def __getitem__(self, name):
+        return self._fields[name]
+
+    def keys(self):
+        return self._fields.keys()
+
+    def items(self):
+        return self._fields.items()
+
+    def __iter__(self):
+        return iter(self._fields.values())
+
+    def __len__(self):
+        return len(self._fields)
+
+    def map(self, fn: Callable[[Field], Field]) -> "FieldSet":
+        return FieldSet(**{k: fn(v) for k, v in self._fields.items()})
+
+    def __repr__(self):
+        inner = ", ".join(f"{k}={v.loc}" for k, v in self._fields.items())
+        return f"FieldSet({inner})"
+
+
+def _is_field(x) -> bool:
+    return isinstance(x, Field)
+
+
+def map_fields(fn, tree, *rest):
+    """``jax.tree.map`` treating Field nodes (not raw arrays) as leaves."""
+    return jax.tree_util.tree_map(fn, tree, *rest, is_leaf=_is_field)
+
+
+# ---------------------------------------------------------------------------
+# location-aware masks (local view)
+# ---------------------------------------------------------------------------
+
+def valid_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
+    """1.0 on real points of ``loc`` (excludes the staggered dead plane)."""
+    dtype = dtype or grid.dtype
+    m = jnp.ones(grid.local_shape, dtype)
+    sd = stagger_dim(loc)
+    if sd is not None:
+        gidx = grid.local_global_indices()
+        m = m * (gidx[sd] < grid.n_g(sd) - 1).astype(dtype)
+    return m
+
+
+def owned_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
+    """Deduplicated ownership over the VALID points of ``loc``.
+
+    Face index ``i`` is aligned with center index ``i``, so center
+    ownership (each global index interior to exactly one block) carries
+    over verbatim; intersecting with validity drops the dead plane.
+    """
+    dtype = dtype or grid.dtype
+    return red.owned_mask(grid, dtype) * valid_mask(grid, loc, dtype)
+
+
+def interior_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
+    """1.0 on the Dirichlet unknowns of a field at ``loc``.
+
+    Along a non-staggered dim the boundary ring is the usual global
+    ``[0, w)`` / ``[N - w, N)``; along the staggered dim the boundary
+    *faces* are ``[0, w)`` and ``[N - 1 - w, N - 1)`` (the dead plane
+    ``N - 1`` is excluded too).  ``w`` is the grid halo width.
+    """
+    dtype = dtype or grid.dtype
+    w = grid.halo
+    m = jnp.ones(grid.local_shape, dtype)
+    gidx = grid.local_global_indices()
+    sd = stagger_dim(loc)
+    for d in range(grid.ndims):
+        hi = grid.n_g(d) - w - (1 if d == sd else 0)
+        m = m * ((gidx[d] >= w) & (gidx[d] < hi)).astype(dtype)
+    return m
+
+
+def solve_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
+    """Reduction mask over the unknowns of ``loc``, each counted once."""
+    return owned_mask(grid, loc, dtype) * interior_mask(grid, loc, dtype)
+
+
+def _mask_tree(grid, tree, mask_fn):
+    """Structure-matching pytree of masks for a tree of Fields/arrays.
+
+    Field nodes map to Field-wrapped masks (so raw-leaf ``tree.map``
+    against the original tree lines up); bare arrays map to center masks.
+    """
+    def one(node):
+        if _is_field(node):
+            return node.with_data(mask_fn(node.grid, node.loc, node.dtype))
+        return mask_fn(grid, "center", node.dtype)
+
+    return map_fields(one, tree)
+
+
+def solve_mask_tree(grid, tree):
+    return _mask_tree(grid, tree, solve_mask)
+
+
+def interior_mask_tree(grid, tree):
+    return _mask_tree(grid, tree, interior_mask)
+
+
+# ---------------------------------------------------------------------------
+# halo exchange / hiding (local view)
+# ---------------------------------------------------------------------------
+
+def update_halo(grid: ImplicitGlobalGrid, tree, width: int | None = None):
+    """Location-aware halo exchange of a pytree of Fields/arrays.
+
+    Shape-uniform staggering makes the exchange mechanics identical for
+    every location (see :mod:`repro.core.halo`); this wrapper forwards the
+    per-array locations so staggered fields on periodic dims are rejected
+    (their wraparound would have to skip the dead plane — unsupported).
+    """
+    w = grid.halo if width is None else width
+
+    def one(node):
+        if _is_field(node):
+            return node.with_data(_halo.update_halo(
+                grid.topo, node.data, width=w, locations=(node.loc,)))
+        return _halo.update_halo(grid.topo, node, width=w)
+
+    return map_fields(one, tree)
+
+
+def hide_step(grid: ImplicitGlobalGrid, step_fn, fset, width=(16, 2, 2)):
+    """``grid.hide`` for FieldSet steps (local view).
+
+    ``step_fn(fset) -> fset`` maps a FieldSet to an updated FieldSet of
+    the same structure; the boundary-shell/interior split and overlapped
+    halo exchange of :func:`repro.core.hide.hide_communication` are
+    applied to the underlying arrays.  Staggered fields on periodic dims
+    are rejected exactly as in :func:`update_halo` (the internal exchange
+    would misalign across the dead plane).
+    """
+    def check(node):
+        if _is_field(node):
+            sd = node.stagger_dim
+            if sd is not None and grid.topo.periodic[sd]:
+                raise ValueError(
+                    f"hide_step of a {node.loc!r} field along periodic dim "
+                    f"{sd} is not supported (wraparound would cross the "
+                    "dead plane)")
+        return node
+
+    map_fields(check, fset)
+    leaves, treedef = jax.tree_util.tree_flatten(fset)
+
+    def raw_step(*arrays):
+        out = step_fn(jax.tree_util.tree_unflatten(treedef, arrays))
+        out_leaves, out_def = jax.tree_util.tree_flatten(out)
+        if out_def != treedef:
+            raise ValueError("hide_step: step_fn must preserve the FieldSet "
+                             f"structure ({treedef} -> {out_def})")
+        return tuple(out_leaves)
+
+    outs = _hide.hide_communication(
+        grid.topo, raw_step, leaves,
+        width=width[: grid.ndims], halo=grid.halo)
+    if not isinstance(outs, tuple):
+        outs = (outs,)
+    return jax.tree_util.tree_unflatten(treedef, outs)
+
+
+# ---------------------------------------------------------------------------
+# allocation / IO (host level)
+# ---------------------------------------------------------------------------
+
+def zeros(grid: ImplicitGlobalGrid, loc: str = "center", dtype=None) -> Field:
+    return Field(grid, grid.zeros(dtype), loc)
+
+
+def from_global_fn(grid: ImplicitGlobalGrid, fn, loc: str = "center",
+                   dtype=None) -> Field:
+    """Field initialized as ``fn(ix, iy, iz)`` of global *point* indices.
+
+    For a face location, index ``i`` along the staggered dim refers to the
+    face at coordinate ``(i + 1/2) * h`` — shift inside ``fn`` as needed.
+    The dead plane is zeroed.
+    """
+    sd = stagger_dim(loc)
+
+    def wrapped(*idx):
+        v = fn(*idx)
+        if sd is not None:
+            v = jnp.where(idx[sd] < grid.n_g(sd) - 1, v, 0)
+        return v
+
+    return Field(grid, grid.from_global_fn(wrapped, dtype), loc)
+
+
+def gather(field: Field) -> np.ndarray:
+    """Deduplicated global array of the VALID points of ``field``."""
+    g = field.grid
+    a = g.gather(field.data)
+    sd = field.stagger_dim
+    if sd is not None:
+        a = a[tuple(slice(0, -1) if d == sd else slice(None)
+                    for d in range(g.ndims))]
+    return a
+
+
+def scatter(grid: ImplicitGlobalGrid, G: np.ndarray, loc: str = "center") -> Field:
+    """Inverse of :func:`gather`: valid global array -> stacked Field."""
+    G = np.asarray(G)
+    want = valid_global_shape(grid, loc)
+    if tuple(G.shape) != want:
+        raise ValueError(f"expected valid shape {want} for {loc!r}, "
+                         f"got {G.shape}")
+    sd = stagger_dim(loc)
+    if sd is not None:
+        pad = [(0, 1) if d == sd else (0, 0) for d in range(grid.ndims)]
+        G = np.pad(G, pad)
+    return Field(grid, grid.scatter(G), loc)

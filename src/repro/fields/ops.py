@@ -1,0 +1,137 @@
+"""Interpolation and difference operators between staggering locations.
+
+``fd3d``-style finite differences, but *location-aware* and shape-
+preserving: every op takes and returns arrays of the full local shape
+(shape-uniform staggering, see :mod:`repro.fields.field`), writing zeros
+into the cells that have no well-defined value (the staggered dead plane
+for center->face ops, the leading plane for face->center ops).
+
+Conventions (face ``i`` sits between centers ``i`` and ``i + 1``):
+
+    diff_to_face:    f[i] = (c[i+1] - c[i]) / h          valid i < n-1
+    avg_to_face:     f[i] = (c[i] + c[i+1]) / 2          valid i < n-1
+    diff_to_center:  c[i] = (f[i] - f[i-1]) / h          valid i >= 1
+    avg_to_center:   c[i] = (f[i-1] + f[i]) / 2          valid i >= 1
+    avg_to_edge:     e[i,j] = 4-point average            valid i,j < n-1
+
+All ops are pure and local (no communication) and are valid wherever
+their inputs are halo-consistent — exactly like the :mod:`repro.stencil`
+macros, but without changing array shapes, so results stay grid fields.
+Like the stencil macros' zero-ring convention, the written zero planes
+include each block's copy of cells its *neighbor* computes, so
+halo-update the result (``repro.fields.update_halo``) before gathering
+it or before ops that read those planes.
+
+The raw-array functions take the dimension(s) explicitly; the Field-level
+wrappers (:func:`grad`, :func:`div`, :func:`to_face`, :func:`to_center`)
+check and produce the right locations.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .field import Field, FieldSet, face_location, stagger_dim
+
+__all__ = [
+    "diff_to_face", "diff_to_center", "avg_to_face", "avg_to_center",
+    "avg_to_edge", "to_face", "to_center", "grad", "div",
+]
+
+
+def _sd(nd: int, d: int, start, stop) -> tuple:
+    s: list = [slice(None)] * nd
+    s[d] = slice(start, stop)
+    return tuple(s)
+
+
+def diff_to_face(c, d: int, h: float = 1.0):
+    """Center -> face-``d`` forward difference; dead plane zero."""
+    nd = c.ndim
+    out = (c[_sd(nd, d, 1, None)] - c[_sd(nd, d, 0, -1)]) / h
+    return jnp.zeros_like(c).at[_sd(nd, d, 0, -1)].set(out)
+
+
+def avg_to_face(c, d: int):
+    """Center -> face-``d`` two-point average; dead plane zero."""
+    nd = c.ndim
+    out = 0.5 * (c[_sd(nd, d, 0, -1)] + c[_sd(nd, d, 1, None)])
+    return jnp.zeros_like(c).at[_sd(nd, d, 0, -1)].set(out)
+
+
+def diff_to_center(f, d: int, h: float = 1.0):
+    """Face-``d`` -> center backward difference; leading plane zero."""
+    nd = f.ndim
+    out = (f[_sd(nd, d, 1, None)] - f[_sd(nd, d, 0, -1)]) / h
+    return jnp.zeros_like(f).at[_sd(nd, d, 1, None)].set(out)
+
+
+def avg_to_center(f, d: int):
+    """Face-``d`` -> center two-point average; leading plane zero."""
+    nd = f.ndim
+    out = 0.5 * (f[_sd(nd, d, 0, -1)] + f[_sd(nd, d, 1, None)])
+    return jnp.zeros_like(f).at[_sd(nd, d, 1, None)].set(out)
+
+
+def avg_to_edge(c, d1: int, d2: int):
+    """Center -> edge staggered along BOTH ``d1`` and ``d2`` (4-pt avg).
+
+    ``e[i, j]`` sits at ``(i + 1/2, j + 1/2)``; dead planes along both
+    dims are zero.  Used for e.g. viscosity at shear-stress points.
+    """
+    if d1 == d2:
+        raise ValueError("edge dims must differ")
+    nd = c.ndim
+    a = c[_sd(nd, d1, 0, -1)] + c[_sd(nd, d1, 1, None)]
+    b = a[_sd(nd, d2, 0, -1)] + a[_sd(nd, d2, 1, None)]
+    out = 0.25 * b
+    dst = [slice(None)] * nd
+    dst[d1] = slice(0, -1)
+    dst[d2] = slice(0, -1)
+    return jnp.zeros_like(c).at[tuple(dst)].set(out)
+
+
+# ---------------------------------------------------------------------------
+# Field-level wrappers (location-checked)
+# ---------------------------------------------------------------------------
+
+def to_face(f: Field, d: int) -> Field:
+    """Interpolate a center Field onto the ``d``-faces."""
+    if f.loc != "center":
+        raise ValueError(f"to_face expects a center field, got {f.loc!r}")
+    return Field(f.grid, avg_to_face(f.data, d), face_location(d))
+
+
+def to_center(f: Field) -> Field:
+    """Interpolate a face Field back onto the centers."""
+    sd = f.stagger_dim
+    if sd is None:
+        raise ValueError("to_center expects a face field")
+    return Field(f.grid, avg_to_center(f.data, sd), "center")
+
+
+def grad(p: Field, spacing) -> FieldSet:
+    """Center Field -> FieldSet of face-located components of its gradient."""
+    if p.loc != "center":
+        raise ValueError(f"grad expects a center field, got {p.loc!r}")
+    names = ("x", "y", "z")
+    comps = {
+        names[d]: Field(p.grid, diff_to_face(p.data, d, spacing[d]),
+                        face_location(d))
+        for d in range(p.grid.ndims)
+    }
+    return FieldSet(**comps)
+
+
+def div(V: FieldSet, spacing) -> Field:
+    """FieldSet of face components -> center Field of the divergence."""
+    acc = None
+    grid = None
+    for f in V:
+        sd = f.stagger_dim
+        if sd is None:
+            raise ValueError("div expects face-located components")
+        grid = f.grid
+        term = diff_to_center(f.data, sd, spacing[sd])
+        acc = term if acc is None else acc + term
+    return Field(grid, acc, "center")

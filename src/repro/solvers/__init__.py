@@ -6,34 +6,43 @@ stencil step plus deduplicated global reductions for convergence.  This
 package provides that as a platform:
 
 * :mod:`reductions` — exact global dot/norms inside the shard_map local
-  view (halo-overlap cells masked out), via ``psum``/``pmax``.
-* :func:`cg` — matrix-free (preconditioned) conjugate gradient; the whole
-  Krylov loop is one compiled ``lax.while_loop``.
+  view (halo-overlap cells masked out), via ``psum``/``pmax``; including
+  single-all-reduce dots over whole pytrees (staggered FieldSets).
+* :func:`cg` — matrix-free (preconditioned) conjugate gradient over an
+  array OR a staggered-system pytree; the whole Krylov loop is one
+  compiled ``lax.while_loop``.
 * :func:`pseudo_transient` — the accelerated pseudo-transient method
   (damped second-order dynamics) with device-side residual history.
 * :func:`multigrid_solve` — geometric V-cycles on the
   :meth:`ImplicitGlobalGrid.hierarchy` of coarsened grids, with
-  distributed full-weighting restriction and trilinear prolongation.
+  distributed full-weighting restriction and trilinear prolongation and
+  a choice of damped-Jacobi or 3-term Chebyshev smoothing.
+* :class:`CyclePreconditioner` — the V-cycle as an SPD preconditioner
+  for ``cg`` (``apply_M``), set up once inside the compiled solve.
 """
 
 from .reductions import (
     dot, norm_l2, norm_linf, owned_mask, interior_mask, solve_mask,
     dot_g, norm_l2_g, norm_linf_g, field_min, field_max,
-    field_min_g, field_max_g,
+    field_min_g, field_max_g, tree_dot, tree_rhs_norm,
 )
 from .cg import cg, SolveInfo
 from .pseudo_transient import pseudo_transient, PTInfo, optimal_parameters
 from .multigrid import (
     multigrid_solve, poisson_apply, poisson_diag,
     restrict_full_weighting, prolong_trilinear, coarsen_coefficient,
+    make_v_cycle, build_coefficients, level_spacings, SMOOTHERS,
 )
+from .preconditioner import CyclePreconditioner
 
 __all__ = [
     "dot", "norm_l2", "norm_linf", "owned_mask", "interior_mask", "solve_mask",
     "dot_g", "norm_l2_g", "norm_linf_g", "field_min", "field_max",
-    "field_min_g", "field_max_g",
+    "field_min_g", "field_max_g", "tree_dot", "tree_rhs_norm",
     "cg", "SolveInfo",
     "pseudo_transient", "PTInfo", "optimal_parameters",
     "multigrid_solve", "poisson_apply", "poisson_diag",
     "restrict_full_weighting", "prolong_trilinear", "coarsen_coefficient",
+    "make_v_cycle", "build_coefficients", "level_spacings", "SMOOTHERS",
+    "CyclePreconditioner",
 ]

@@ -12,6 +12,12 @@ deduplicated global dot products via ``psum``, vector updates) runs inside
 ONE ``lax.while_loop`` under ONE ``shard_map``, so a solve-to-tolerance is
 a single compiled XLA program — no host round-trip per iteration.
 
+The unknown vector is a PYTREE: a bare array (scalar problems), or a
+whole staggered system (``repro.fields.FieldSet`` — e.g. the three
+face-located velocity components of a Stokes solve) with location-aware
+ownership/unknown masks per leaf, all reduced in a single all-reduce per
+dot product.  ``apply_A`` maps the pytree to the same structure.
+
 Convergence is judged on the deduplicated global residual norm (halo
 overlap cells masked via :mod:`repro.solvers.reductions`), so the result
 is identical to a single-device solve of the true global system.
@@ -39,6 +45,44 @@ class SolveInfo:
     converged: bool
 
 
+def _is_field_node(x) -> bool:
+    """A repro.fields Field, detected without importing the package."""
+    return getattr(x, "_staggered_tree", False) and hasattr(x, "loc")
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def _mask_trees(grid: ImplicitGlobalGrid, tree):
+    """(reduction_masks, unknown_masks) matching ``tree``'s structure.
+
+    Field nodes get their location-aware masks (wrapped back into Fields
+    so raw-leaf ``tree_map`` against ``tree`` lines up); bare arrays get
+    the center-field masks — identical to the scalar-CG behavior.
+    """
+    def solve(node):
+        if _is_field_node(node):
+            return node.with_data(node.solve_mask())
+        return red.solve_mask(grid, node.dtype)
+
+    def unknown(node):
+        if _is_field_node(node):
+            return node.with_data(node.interior_mask())
+        return red.interior_mask(grid, dtype=node.dtype)
+
+    is_leaf = _is_field_node
+    return (jax.tree_util.tree_map(solve, tree, is_leaf=is_leaf),
+            jax.tree_util.tree_map(unknown, tree, is_leaf=is_leaf))
+
+
+def _sig(tree) -> tuple:
+    """Hashable (structure, shapes, dtypes) signature for the jit cache."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return (jax.tree_util.tree_structure(tree),
+            tuple((tuple(l.shape), jnp.dtype(l.dtype).name) for l in leaves))
+
+
 def cg(
     grid: ImplicitGlobalGrid,
     apply_A: Callable,
@@ -52,27 +96,40 @@ def cg(
 ):
     """Solve ``A x = b`` with (preconditioned) conjugate gradient.
 
-    ``apply_A(u, *args_local)`` (and the optional SPD preconditioner
-    ``apply_M``, applied as ``z = M r``) are local-view functions; they
-    must zero the physical boundary ring so Dirichlet boundary cells stay
-    fixed.  ``args`` are extra grid fields (e.g. a coefficient field)
-    passed to the operator in their local view.  ``b`` / ``x0`` are
-    host-level grid fields.  Returns ``(x, SolveInfo)``.
+    ``apply_A(u, *args_local)`` is a local-view function over the pytree
+    ``u``; it must zero the physical boundary ring (per-location boundary
+    faces for staggered leaves) so Dirichlet boundary cells stay fixed.
+    ``args`` are extra grid fields (e.g. a coefficient field) passed to
+    the operator in their local view.  ``b`` / ``x0`` are host-level grid
+    fields or pytrees thereof (``FieldSet`` for staggered systems).
+
+    ``apply_M`` is an optional SPD preconditioner, applied as ``z = M r``.
+    It is either a plain local-view function of the residual pytree, or an
+    object with ``setup(*args_local) -> M`` (e.g.
+    :class:`repro.solvers.preconditioner.CyclePreconditioner`), whose
+    setup runs ONCE before the Krylov loop — per-level coefficient
+    hierarchies and the like are hoisted out of the iteration.
+
+    Returns ``(x, SolveInfo)``.
     """
     if x0 is None:
-        x0 = jnp.zeros_like(b)
+        x0 = _tmap(jnp.zeros_like, b)
 
     def _local(b, x, *ops):
-        mask = red.solve_mask(grid, b.dtype)
-        mi = red.interior_mask(grid, dtype=b.dtype)
+        red_masks, unk_masks = _mask_trees(grid, b)
 
         def mdot(u, v):
-            return red.dot(grid, u, v, mask)
+            return red.tree_dot(grid, u, v, red_masks)
 
-        bnorm = red.rhs_norm(grid, b, mask)
+        def masked(t):
+            return _tmap(lambda a, m: a * m, t, unk_masks)
 
-        r = (b - apply_A(x, *ops)) * mi
-        z = apply_M(r) * mi if apply_M is not None else r
+        bnorm = red.tree_rhs_norm(grid, b, red_masks)
+
+        M = apply_M.setup(*ops) if hasattr(apply_M, "setup") else apply_M
+
+        r = masked(_tmap(lambda bi, ai: bi - ai, b, apply_A(x, *ops)))
+        z = masked(M(r)) if M is not None else r
         p = z
         rz = mdot(r, z)
         res = jnp.sqrt(mdot(r, r))
@@ -83,15 +140,15 @@ def cg(
 
         def body(carry):
             x, r, p, rz, _, k = carry
-            Ap = apply_A(p, *ops) * mi
+            Ap = masked(apply_A(p, *ops))
             alpha = rz / mdot(p, Ap)
-            x = x + alpha * p
-            r = r - alpha * Ap
-            z = apply_M(r) * mi if apply_M is not None else r
+            x = _tmap(lambda xi, pi: xi + alpha * pi, x, p)
+            r = _tmap(lambda ri, ai: ri - alpha * ai, r, Ap)
+            z = masked(M(r)) if M is not None else r
             rz_new = mdot(r, z)
-            p = z + (rz_new / rz) * p
+            p = _tmap(lambda zi, pi: zi + (rz_new / rz) * pi, z, p)
             # unpreconditioned: rz_new IS <r, r>; skip the third all-reduce
-            res = jnp.sqrt(mdot(r, r)) if apply_M is not None \
+            res = jnp.sqrt(mdot(r, r)) if M is not None \
                 else jnp.sqrt(rz_new)
             return x, r, p, rz_new, res, k + 1
 
@@ -100,13 +157,14 @@ def cg(
         )
         # Seam halo cells of x were never written by the masked updates;
         # refresh them so gather() sees the solution everywhere.
-        return grid.update_halo(x), k, res / bnorm
+        x = _tmap(lambda a: grid.update_halo(a), x)
+        return x, k, res / bnorm
 
-    # One compiled program per (operator, tolerances, shapes): reuse the
-    # grid's executable cache so repeat solves skip retracing (and
-    # finalize() releases them).
+    # One compiled program per (operator, tolerances, structure/shapes):
+    # reuse the grid's executable cache so repeat solves skip retracing
+    # (and finalize() releases them).
     key = ("solvers.cg", apply_A, apply_M, tol, maxiter,
-           b.shape, b.dtype, tuple((a.shape, a.dtype) for a in args))
+           _sig(b), tuple(_sig(a) for a in args))
     if key not in grid._jit_cache:
         sm = jax.shard_map(
             _local, mesh=grid.mesh,

@@ -20,10 +20,28 @@ cell ``i`` has fine children ``2i-1, 2i`` per dim (the cell-centered
 live in the local fine block and its halo — restriction and prolongation
 need NO communication beyond the one halo update.
 
-The smoother is damped Jacobi on the flux-form variable-coefficient
-Poisson operator ``A u = -div(c grad u)`` (also exported here for the
-CG / pseudo-transient solvers).  The whole V-cycle iteration-to-tolerance
-is one ``lax.while_loop`` under one ``shard_map``, like the other solvers.
+Two smoothers are available on the flux-form variable-coefficient Poisson
+operator ``A u = -div(c grad u)`` (also exported here for the CG /
+pseudo-transient solvers):
+
+* ``"jacobi"`` — damped Jacobi (default damping 6/7);
+* ``"chebyshev"`` — a 3-term-recurrence Chebyshev iteration on the
+  Jacobi-preconditioned operator ``D^-1 A`` over the upper-spectrum
+  interval ``[lam_max/4, lam_max]`` with the Gershgorin bound
+  ``lam_max = 2`` (flux form: the off-diagonal row sum equals the
+  diagonal).  NO extra global reductions — the bounds are analytic, and
+  the residual polynomial is ``<= 1`` below the interval, so smooth modes
+  are never amplified.  Better variable-coefficient smoothing at scale.
+
+The coarsest level is always solved with damped-Jacobi sweeps (a
+Chebyshev *solver* would need a lower spectral bound).
+
+The V-cycle is exposed two ways: :func:`multigrid_solve` iterates cycles
+to tolerance (one ``lax.while_loop`` under one ``shard_map``, like the
+other solvers), and :func:`make_v_cycle` builds the cycle as a reusable
+local-view closure — e.g. as the preconditioner inside
+:func:`repro.solvers.cg.cg` (see
+:class:`repro.solvers.preconditioner.CyclePreconditioner`).
 """
 
 from __future__ import annotations
@@ -32,9 +50,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import hide as _hide
 from repro.core.grid import ImplicitGlobalGrid
 from . import reductions as red
 from .cg import SolveInfo
+
+SMOOTHERS = ("jacobi", "chebyshev")
 
 
 def _sl(nd: int, d: int, start, stop, step=None) -> tuple:
@@ -65,14 +86,8 @@ def _shift(a, d: int, s: int):
 # flux-form variable-coefficient Poisson operator (local view)
 # ---------------------------------------------------------------------------
 
-def poisson_apply(grid: ImplicitGlobalGrid, u, c, spacing, update_halo=True):
-    """``A u = -div(c grad u)`` on the interior, zero on the ring.
-
-    ``c`` is the cell-centered coefficient (halo-consistent); face
-    coefficients are arithmetic averages of the two adjacent cells.
-    """
-    if update_halo:
-        u = grid.update_halo(u)
+def _poisson_stencil(u, c, spacing):
+    """The flux-form stencil of halo-consistent ``u`` (no communication)."""
     nd = u.ndim
     u0 = u[_inner(nd)]
     c0 = c[_inner(nd)]
@@ -84,6 +99,32 @@ def poisson_apply(grid: ImplicitGlobalGrid, u, c, spacing, update_halo=True):
         cf_m = 0.5 * (c0 + cm)
         acc = acc + (cf_p * (up - u0) - cf_m * (u0 - um)) / spacing[d] ** 2
     return jnp.zeros_like(u).at[_inner(nd)].set(-acc)
+
+
+def poisson_apply(grid: ImplicitGlobalGrid, u, c, spacing,
+                  update_halo=True, hide=False):
+    """``A u = -div(c grad u)`` on the interior, zero on the ring.
+
+    ``c`` is the cell-centered coefficient (halo-consistent); face
+    coefficients are arithmetic averages of the two adjacent cells.
+
+    ``hide=True`` overlaps the halo exchange of ``u`` with the stencil on
+    the locally valid bulk via :func:`repro.core.hide.hide_apply` (same
+    arithmetic, ~1-ulp shell differences at most): the exchange covers
+    only the thin shell of output cells adjacent to the halos, which is
+    recomputed after.
+    """
+    if hide:
+        if not update_halo:
+            raise ValueError("hide=True already includes the halo update")
+        if grid.halo != 1:
+            raise ValueError("hide=True requires halo width 1 (3-point stencil)")
+        return _hide.hide_apply(
+            grid.topo, lambda uu, cc: _poisson_stencil(uu, cc, spacing),
+            u, c, halo=grid.halo)
+    if update_halo:
+        u = grid.update_halo(u)
+    return _poisson_stencil(u, c, spacing)
 
 
 def poisson_diag(c, spacing):
@@ -162,6 +203,128 @@ def coarsen_coefficient(c):
 
 
 # ---------------------------------------------------------------------------
+# V-cycle construction (shared by the solver and the CG preconditioner)
+# ---------------------------------------------------------------------------
+
+def level_spacings(grid: ImplicitGlobalGrid, grids, spacing):
+    """Per-level grid spacings from each level's true global node count.
+
+    NOT a naive ``2**level`` — the ring nodes don't coarsen, so the exact
+    factor is ``(N_fine-1)/(N_coarse-1)`` per dim; getting this wrong
+    mis-scales deep coarse operators by up to ~50% in ``1/h^2`` and
+    stalls the cycle.
+    """
+    spacing = tuple(float(s) for s in spacing)
+    lengths = [(n - 1) * h for n, h in zip(grid.global_shape, spacing)]
+    return [
+        tuple(L / (n - 1) for L, n in zip(lengths, g.global_shape))
+        for g in grids
+    ]
+
+
+def build_coefficients(grid: ImplicitGlobalGrid, grids, c):
+    """Per-level halo-consistent coefficient fields (local view)."""
+    cs = [grid.update_halo(c)]
+    for _ in grids[1:]:
+        cs.append(grid.update_halo(coarsen_coefficient(cs[-1])))
+    return cs
+
+
+# Chebyshev smoothing interval on D^-1 A: Gershgorin gives lam_max = 2 for
+# the flux-form operator; the standard upper-spectrum target [b/4, b].
+_CHEB_UPPER = 2.0
+_CHEB_RATIO = 4.0
+
+
+def _cheb_rhos(degree: int) -> tuple[float, float, list[float]]:
+    """(theta, delta, [rho_1..rho_degree]) of the 3-term recurrence."""
+    a, b = _CHEB_UPPER / _CHEB_RATIO, _CHEB_UPPER
+    theta, delta = (b + a) / 2.0, (b - a) / 2.0
+    sigma1 = theta / delta
+    rhos = [1.0 / sigma1]
+    for _ in range(degree - 1):
+        rhos.append(1.0 / (2.0 * sigma1 - rhos[-1]))
+    return theta, delta, rhos
+
+
+def make_v_cycle(
+    grid: ImplicitGlobalGrid,
+    grids,
+    hs,
+    cs,
+    *,
+    nu_pre: int = 2,
+    nu_post: int = 2,
+    omega: float = 6.0 / 7.0,
+    coarse_sweeps: int = 100,
+    smoother: str = "jacobi",
+):
+    """Build ``(v_cycle, residual)`` local-view closures over a hierarchy.
+
+    ``grids``/``hs``/``cs`` are the per-level grids, spacings
+    (:func:`level_spacings`) and halo-consistent coefficients
+    (:func:`build_coefficients`).  ``v_cycle(level, u, f)`` takes a
+    halo-consistent iterate and a zero-ring right-hand side;
+    ``residual(level, u, f)`` is ``f - A u`` with a zero ring.
+
+    ``smoother`` selects damped Jacobi or the 3-term Chebyshev smoother
+    for the pre/post sweeps (``nu_pre``/``nu_post`` = sweeps resp.
+    polynomial degree); the coarsest level always uses Jacobi sweeps.
+    """
+    if smoother not in SMOOTHERS:
+        raise ValueError(f"unknown smoother {smoother!r}; pick from {SMOOTHERS}")
+    nd = grid.ndims
+    dias = [poisson_diag(ck, hk) for ck, hk in zip(cs, hs)]
+
+    def residual(level, u, f):
+        """f - A u on the interior, zero ring (u halo-consistent)."""
+        Au = poisson_apply(grids[level], u, cs[level], hs[level],
+                           update_halo=False)
+        r = f[_inner(nd)] - Au[_inner(nd)]
+        return jnp.zeros_like(u).at[_inner(nd)].set(r)
+
+    def jacobi(level, u, f, iters):
+        def body(_, u):
+            r = residual(level, u, f)
+            u = u.at[_inner(nd)].add(omega * r[_inner(nd)] / dias[level])
+            return grid.update_halo(u)
+
+        return jax.lax.fori_loop(0, iters, body, u)
+
+    def chebyshev(level, u, f, degree):
+        # 3-term recurrence on D^-1 A over [lam_max/4, lam_max]; the
+        # rho_k are analytic constants — no reductions, fully unrolled.
+        theta, delta, rhos = _cheb_rhos(degree)
+        z = residual(level, u, f)[_inner(nd)] / dias[level]
+        d = z / theta
+        u = grid.update_halo(u.at[_inner(nd)].add(d))
+        for k in range(1, degree):
+            z = residual(level, u, f)[_inner(nd)] / dias[level]
+            d = (rhos[k] * rhos[k - 1]) * d + (2.0 * rhos[k] / delta) * z
+            u = grid.update_halo(u.at[_inner(nd)].add(d))
+        return u
+
+    smooth = jacobi if smoother == "jacobi" else chebyshev
+
+    def v_cycle(level, u, f):
+        if level == len(grids) - 1:
+            return jacobi(level, u, f, coarse_sweeps)
+        u = smooth(level, u, f, nu_pre)
+        r = grid.update_halo(residual(level, u, f))
+        fc = grid.update_halo(restrict_full_weighting(r))
+        ec = v_cycle(
+            level + 1,
+            jnp.zeros(grids[level + 1].local_shape, u.dtype),
+            fc,
+        )
+        e = grid.update_halo(prolong_trilinear(ec))
+        u = u + e
+        return smooth(level, u, f, nu_post)
+
+    return v_cycle, residual
+
+
+# ---------------------------------------------------------------------------
 # V-cycle solver
 # ---------------------------------------------------------------------------
 
@@ -179,16 +342,21 @@ def multigrid_solve(
     omega: float = 6.0 / 7.0,
     coarse_sweeps: int = 100,
     max_levels: int | None = None,
+    smoother: str = "jacobi",
 ):
     """Solve ``-div(c grad x) = b`` (homogeneous Dirichlet) by V-cycles.
 
     ``c``/``b`` are host-level grid fields; convergence is the
     deduplicated global relative residual on the FINE level, so the
     solution matches a single-device solve regardless of how crude the
-    coarse-level operators are.  Returns ``(x, SolveInfo)``.
+    coarse-level operators are.  ``smoother`` picks damped Jacobi or the
+    3-term Chebyshev smoother for the pre/post sweeps.  Returns
+    ``(x, SolveInfo)``.
     """
     if grid.halo != 1:
         raise ValueError("multigrid assumes halo width 1 (overlap=2)")
+    if smoother not in SMOOTHERS:
+        raise ValueError(f"unknown smoother {smoother!r}; pick from {SMOOTHERS}")
     grids = grid.hierarchy(max_levels=max_levels)
     if len(grids) < 2:
         raise ValueError(
@@ -197,58 +365,15 @@ def multigrid_solve(
     if x0 is None:
         x0 = jnp.zeros_like(b)
     spacing = tuple(float(s) for s in spacing)
-    nd = grid.ndims
-
-    # Per-level spacings from each level's true global node count (NOT a
-    # naive 2**level — the ring nodes don't coarsen, so the exact factor
-    # is (N_fine-1)/(N_coarse-1) per dim; getting this wrong mis-scales
-    # deep coarse operators by up to ~50% in 1/h^2 and stalls the cycle).
-    lengths = [
-        (n - 1) * h for n, h in zip(grid.global_shape, spacing)
-    ]
-    hs = [
-        tuple(L / (n - 1) for L, n in zip(lengths, g.global_shape))
-        for g in grids
-    ]
+    hs = level_spacings(grid, grids, spacing)
 
     def _local(b, c, x):
-        # Per-level coefficients and Jacobi diagonals.
-        cs = [grid.update_halo(c)]
-        for _ in grids[1:]:
-            cs.append(grid.update_halo(coarsen_coefficient(cs[-1])))
-        dias = [poisson_diag(ck, hk) for ck, hk in zip(cs, hs)]
-
+        cs = build_coefficients(grid, grids, c)
+        v_cycle, residual = make_v_cycle(
+            grid, grids, hs, cs, nu_pre=nu_pre, nu_post=nu_post,
+            omega=omega, coarse_sweeps=coarse_sweeps, smoother=smoother,
+        )
         mask = red.solve_mask(grid, b.dtype)
-
-        def residual(level, u, f):
-            """f - A u on the interior, zero ring (u halo-consistent)."""
-            Au = poisson_apply(grids[level], u, cs[level], hs[level],
-                               update_halo=False)
-            r = f[_inner(nd)] - Au[_inner(nd)]
-            return jnp.zeros_like(u).at[_inner(nd)].set(r)
-
-        def smooth(level, u, f, iters):
-            def body(_, u):
-                r = residual(level, u, f)
-                u = u.at[_inner(nd)].add(omega * r[_inner(nd)] / dias[level])
-                return grid.update_halo(u)
-
-            return jax.lax.fori_loop(0, iters, body, u)
-
-        def v_cycle(level, u, f):
-            if level == len(grids) - 1:
-                return smooth(level, u, f, coarse_sweeps)
-            u = smooth(level, u, f, nu_pre)
-            r = grid.update_halo(residual(level, u, f))
-            fc = grid.update_halo(restrict_full_weighting(r))
-            ec = v_cycle(
-                level + 1,
-                jnp.zeros(grids[level + 1].local_shape, u.dtype),
-                fc,
-            )
-            e = grid.update_halo(prolong_trilinear(ec))
-            u = u + e
-            return smooth(level, u, f, nu_post)
 
         bnorm = red.rhs_norm(grid, b, mask)
         x = grid.update_halo(x)
@@ -272,7 +397,7 @@ def multigrid_solve(
         return x, k, res / bnorm
 
     key = ("solvers.mg", tol, maxiter, nu_pre, nu_post, omega,
-           coarse_sweeps, max_levels, spacing, b.shape, b.dtype)
+           coarse_sweeps, max_levels, smoother, spacing, b.shape, b.dtype)
     if key not in grid._jit_cache:
         sm = jax.shard_map(
             _local, mesh=grid.mesh,

@@ -95,8 +95,7 @@ def solve_mask(grid: ImplicitGlobalGrid, dtype=None):
 def rhs_norm(grid: ImplicitGlobalGrid, b, mask):
     """||b|| for relative-residual tests, guarded so a zero rhs yields 1
     (absolute residuals) instead of a 0/0 in the convergence predicate."""
-    bnorm = jnp.sqrt(dot(grid, b, b, mask))
-    return jnp.where(bnorm > 0, bnorm, jnp.ones_like(bnorm))
+    return tree_rhs_norm(grid, b, mask)
 
 
 def dot(grid: ImplicitGlobalGrid, a, b, mask=None):
@@ -104,6 +103,32 @@ def dot(grid: ImplicitGlobalGrid, a, b, mask=None):
     if mask is None:
         mask = owned_mask(grid, a.dtype)
     return psum(grid.topo, jnp.sum(a * b * mask))
+
+
+def tree_dot(grid: ImplicitGlobalGrid, a, b, masks):
+    """Deduplicated global dot over PYTREES of fields, in ONE all-reduce.
+
+    ``a``/``b``/``masks`` are structure-matching pytrees (e.g. staggered
+    ``repro.fields.FieldSet`` systems, with per-location masks); the local
+    masked partial sums of all leaves are accumulated before the single
+    ``psum`` — the whole staggered system is one Krylov vector.
+    """
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    lm = jax.tree_util.tree_leaves(masks)
+    if not (len(la) == len(lb) == len(lm)):
+        raise ValueError(
+            "tree_dot: mismatched pytrees — "
+            f"{len(la)}/{len(lb)}/{len(lm)} leaves for a/b/masks "
+            "(a silently truncated zip would drop components)")
+    total = sum((x * y * m).sum() for x, y, m in zip(la, lb, lm))
+    return psum(grid.topo, total)
+
+
+def tree_rhs_norm(grid: ImplicitGlobalGrid, b, masks):
+    """Pytree :func:`rhs_norm`: ``||b||`` with the same zero-rhs guard."""
+    bn = jnp.sqrt(tree_dot(grid, b, b, masks))
+    return jnp.where(bn > 0, bn, jnp.ones_like(bn))
 
 
 def norm_l2(grid: ImplicitGlobalGrid, a, mask=None):

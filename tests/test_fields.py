@@ -1,0 +1,348 @@
+"""Staggered-field subsystem: shape arithmetic, masks, gather/scatter,
+location-aware halo/boundary handling, ops vs NumPy, FieldSet through
+grid.parallel / hide / checkpointing / the tree-CG solver."""
+
+import numpy as np
+import pytest
+
+from _mp import run
+
+
+def _host_imports():
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def test_shape_arithmetic_and_validation():
+    """Per-location global shape arithmetic + location validation (host)."""
+    _host_imports()
+    from repro.core import init_global_grid
+    from repro import fields
+
+    g = init_global_grid(10, 8, 6, dims=(1, 1, 1))
+    N = g.global_shape
+    assert fields.valid_global_shape(g, "center") == N
+    assert fields.valid_global_shape(g, "xface") == (N[0] - 1, N[1], N[2])
+    assert fields.valid_global_shape(g, "yface") == (N[0], N[1] - 1, N[2])
+    assert fields.valid_global_shape(g, "zface") == (N[0], N[1], N[2] - 1)
+    assert fields.stagger_dim("center") is None
+    assert fields.stagger_dim("zface") == 2
+    assert fields.face_location(1) == "yface"
+    with pytest.raises(ValueError):
+        fields.stagger_dim("corner")
+    # a 2-D grid has no z-faces
+    g2 = init_global_grid(10, 10, None, dims=(1, 1), axes=("gx", "gy"))
+    with pytest.raises(ValueError):
+        fields.zeros(g2, "zface")
+    # same-location arithmetic only
+    a = fields.zeros(g, "xface")
+    b = fields.zeros(g, "yface")
+    with pytest.raises(ValueError):
+        a + b
+    c = a + 1.0
+    assert c.loc == "xface" and c.shape == a.shape
+
+
+def test_gather_scatter_roundtrip_all_locations():
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import fields
+
+grid = init_global_grid(8, 6, 6, dims=(2, 2, 2), dtype=jnp.float64)
+rng = np.random.RandomState(0)
+for loc in fields.LOCATIONS:
+    G = rng.rand(*fields.valid_global_shape(grid, loc))
+    f = fields.scatter(grid, G, loc)
+    assert f.loc == loc and f.shape == grid.stacked_shape
+    np.testing.assert_array_equal(fields.gather(f), G)
+    # masks: deduplicated ownership over valid points sums to their count
+    from jax.sharding import PartitionSpec as P
+    from repro.solvers import reductions as red
+    own = jax.jit(jax.shard_map(
+        lambda loc=loc: red.psum(grid.topo,
+                                 fields.owned_mask(grid, loc, jnp.float64).sum()),
+        mesh=grid.mesh, in_specs=(), out_specs=P(), check_vma=False))()
+    assert int(own) == np.prod(fields.valid_global_shape(grid, loc))
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_staggered_ops_match_numpy():
+    """Interpolation/difference ops across ranks == NumPy on the valid
+    global arrays (halo seams included)."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import fields
+from repro.fields import Field, ops
+
+grid = init_global_grid(8, 6, 6, dims=(2, 2, 2), dtype=jnp.float64)
+rng = np.random.RandomState(1)
+Gc = rng.rand(*grid.global_shape)
+c = fields.scatter(grid, Gc, "center")
+h = (0.5, 0.25, 2.0)
+
+@grid.parallel
+def face_ops(c):
+    c = fields.update_halo(grid, c)
+    G = ops.grad(c, h)
+    av = Field(grid, ops.avg_to_face(c.data, 1), "yface")
+    return fields.update_halo(grid, (G, av))
+
+(G, av) = face_ops(c)
+np.testing.assert_allclose(fields.gather(G.x), np.diff(Gc, axis=0) / h[0], rtol=1e-13)
+np.testing.assert_allclose(fields.gather(G.z), np.diff(Gc, axis=2) / h[2], rtol=1e-13)
+np.testing.assert_allclose(fields.gather(av),
+                           0.5 * (Gc[:, :-1, :] + Gc[:, 1:, :]), rtol=1e-13)
+
+# face -> center: div(grad) == variable-spacing laplacian on the interior
+@grid.parallel
+def lap(c):
+    c = fields.update_halo(grid, c)
+    V = fields.update_halo(grid, ops.grad(c, h))
+    return fields.update_halo(grid, ops.div(V, h))
+
+L = fields.gather(lap(c))
+ref = np.zeros_like(Gc)
+acc = np.zeros(tuple(n - 2 for n in Gc.shape))
+for d in range(3):
+    inner = [slice(1, -1)] * 3
+    inner[d] = slice(None)
+    acc += np.diff(Gc, 2, axis=d)[tuple(inner)] / h[d] ** 2
+ref[1:-1, 1:-1, 1:-1] = acc
+np.testing.assert_allclose(L[1:-1, 1:-1, 1:-1], ref[1:-1, 1:-1, 1:-1], rtol=1e-12)
+
+# edge average matches the 4-point NumPy average
+@grid.parallel
+def edge(c):
+    c = fields.update_halo(grid, c)
+    return grid.update_halo(ops.avg_to_edge(c.data, 0, 2))
+
+E = grid.gather(edge(c))
+ref_e = 0.25 * (Gc[:-1, :, :-1] + Gc[1:, :, :-1] + Gc[:-1, :, 1:] + Gc[1:, :, 1:])
+np.testing.assert_allclose(E[:-1, :, :-1], ref_e, rtol=1e-13)
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_face_halo_consistency_and_periodic_rejection():
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import fields
+
+grid = init_global_grid(8, 8, 8, dims=(4, 2, 1), dtype=jnp.float64)
+rng = np.random.RandomState(2)
+f = fields.scatter(grid, rng.rand(*fields.valid_global_shape(grid, "xface")),
+                   "xface")
+
+@grid.parallel
+def upd(f):
+    return fields.update_halo(grid, f)
+
+a = np.asarray(upd(f).data)
+nx = grid.local_shape[0]
+Dx = grid.dims[0]
+b = a.reshape(Dx, nx, *a.shape[1:])
+for i in range(Dx - 1):
+    # my high halo == right neighbor's first inner plane (same face!)
+    np.testing.assert_array_equal(b[i][nx - 1], b[i + 1][1])
+    np.testing.assert_array_equal(b[i + 1][0], b[i][nx - 2])
+
+# staggered along a periodic dim is rejected
+gp = init_global_grid(8, 8, 8, dims=(4, 2, 1), periodic=(True, False, False),
+                      dtype=jnp.float64)
+fp = fields.zeros(gp, "xface", jnp.float64)
+@gp.parallel
+def updp(f):
+    return fields.update_halo(gp, f)
+try:
+    updp(fp)
+    raise SystemExit("expected ValueError for periodic staggered halo")
+except ValueError as e:
+    assert "periodic" in str(e)
+# ... and hide_step applies the same rejection
+from repro.fields import FieldSet
+@gp.parallel
+def hidep(f):
+    return fields.hide_step(gp, lambda S: S, FieldSet(f=f), width=(2, 2, 2))
+try:
+    hidep(fp)
+    raise SystemExit("expected ValueError for periodic staggered hide_step")
+except ValueError as e:
+    assert "periodic" in str(e)
+# ... but a face field staggered along a NON-periodic dim is fine
+fq = fields.zeros(gp, "yface", jnp.float64)
+@gp.parallel
+def updq(f):
+    return fields.update_halo(gp, f)
+updq(fq)
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_staggered_boundary_conditions():
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid, boundary
+from repro import fields
+
+grid = init_global_grid(8, 6, 6, dims=(2, 2, 2), dtype=jnp.float64)
+rng = np.random.RandomState(3)
+G = rng.rand(*fields.valid_global_shape(grid, "xface"))
+f = fields.scatter(grid, G, "xface")
+
+@grid.parallel
+def bc(f):
+    d = boundary.dirichlet(grid.topo, f.data, 7.0, 0, staggered=True)
+    n = boundary.neumann0(grid.topo, f.data, 0, staggered=True)
+    return f.with_data(d), f.with_data(n)
+
+D, Nm = bc(f)
+Dg = fields.gather(D)
+# boundary faces 0 and N-2 set; interior untouched
+np.testing.assert_allclose(Dg[0], 7.0)
+np.testing.assert_allclose(Dg[-1], 7.0)
+np.testing.assert_array_equal(Dg[1:-1], G[1:-1])
+# dead plane zeroed on the stacked layout (last rank's trailing plane)
+a = np.asarray(D.data)
+assert np.all(a[-1] == 0.0)
+Ng = fields.gather(Nm)
+np.testing.assert_array_equal(Ng[0], G[1])
+np.testing.assert_array_equal(Ng[-1], G[-2])
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_fieldset_hide_matches_plain():
+    """A staggered two-field step through fields.hide_step == plain
+    step + location-aware halo update (bitwise)."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import fields
+from repro.fields import FieldSet, ops
+
+grid = init_global_grid(12, 10, 10, dims=(2, 2, 2), dtype=jnp.float64)
+rng = np.random.RandomState(4)
+S = FieldSet(
+    p=fields.scatter(grid, rng.rand(*grid.global_shape), "center"),
+    qx=fields.scatter(grid, rng.rand(*fields.valid_global_shape(grid, "xface")),
+                      "xface"),
+)
+
+inn = (slice(1, -1),) * 3
+
+def step(S):
+    # one radius-1 flux step: q <- q - 0.1 grad_x p, p <- p - 0.1 div_x q
+    # (old q), new values written on the interior only (hide contract).
+    qx2 = S.qx.data - 0.1 * ops.diff_to_face(S.p.data, 0)
+    p2 = S.p.data - 0.1 * ops.diff_to_center(S.qx.data, 0)
+    return FieldSet(p=S.p.with_data(S.p.data.at[inn].set(p2[inn])),
+                    qx=S.qx.with_data(S.qx.data.at[inn].set(qx2[inn])))
+
+@grid.parallel
+def plain(S):
+    return fields.update_halo(grid, step(S))
+
+@grid.parallel
+def hidden(S):
+    return fields.hide_step(grid, step, S, width=(3, 2, 2))
+
+a = plain(S)
+b = hidden(S)
+np.testing.assert_array_equal(np.asarray(a.p.data), np.asarray(b.p.data))
+np.testing.assert_array_equal(np.asarray(a.qx.data), np.asarray(b.qx.data))
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_fieldset_checkpoint_roundtrip(tmp_path):
+    run(
+        """
+import tempfile
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import fields
+from repro.fields import FieldSet
+from repro.ckpt import checkpoint as ckpt
+
+grid = init_global_grid(8, 6, 6, dims=(2, 2, 2), dtype=jnp.float64)
+rng = np.random.RandomState(5)
+V = FieldSet(
+    vx=fields.scatter(grid, rng.rand(*fields.valid_global_shape(grid, "xface")), "xface"),
+    vy=fields.scatter(grid, rng.rand(*fields.valid_global_shape(grid, "yface")), "yface"),
+    P=fields.scatter(grid, rng.rand(*grid.global_shape), "center"),
+)
+d = tempfile.mkdtemp()
+ckpt.save(V, 3, d)
+assert ckpt.latest_step(d) == 3
+like = FieldSet(vx=fields.zeros(grid, "xface", jnp.float64),
+                vy=fields.zeros(grid, "yface", jnp.float64),
+                P=fields.zeros(grid, "center", jnp.float64))
+back = ckpt.restore(like, 3, d)
+assert back.vx.loc == "xface" and back.P.loc == "center"
+for k in ("vx", "vy", "P"):
+    np.testing.assert_array_equal(np.asarray(back[k].data), np.asarray(V[k].data))
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_tree_cg_matches_scalar_cg():
+    """CG over a FieldSet of three independent center problems converges
+    to the same solutions as three scalar CG solves."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import fields, solvers
+from repro.fields import FieldSet
+from repro.solvers.multigrid import poisson_apply
+
+grid = init_global_grid(8, 8, 8, dims=(2, 2, 2), dtype=jnp.float64)
+rng = np.random.RandomState(6)
+c = grid.scatter(1.0 + 0.5 * rng.rand(*grid.global_shape))
+h = (0.1, 0.1, 0.1)
+bs = [grid.scatter(rng.rand(*grid.global_shape)) for _ in range(3)]
+
+def apply_one(u, c):
+    return poisson_apply(grid, u, c, h)
+
+def apply_tree(U, c):
+    return U.map(lambda f: f.with_data(apply_one(f.data, c)))
+
+B = FieldSet(**{f"b{i}": fields.Field(grid, b, "center")
+                for i, b in enumerate(bs)})
+X, info = solvers.cg(grid, apply_tree, B, tol=1e-10, args=(c,))
+assert info.converged
+for i, b in enumerate(bs):
+    x_ref, info_ref = solvers.cg(grid, apply_one, b, tol=1e-10, args=(c,))
+    a = grid.gather(X[f"b{i}"].data)
+    r = grid.gather(x_ref)
+    err = np.abs(a - r).max() / np.abs(r).max()
+    assert err < 1e-7, (i, err)
+print("tree iters", info.iterations, "OK")
+""",
+        ndev=8,
+    )
