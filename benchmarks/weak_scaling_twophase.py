@@ -7,6 +7,14 @@ claim (Julia within 90% of the original CUDA C solver) is mirrored here
 by comparing the XLA-compiled step against a NumPy implementation of the
 identical update — reported as a speedup (the roles are reversed on CPU:
 XLA is the optimized implementation, NumPy the portable baseline).
+
+New per-method rows compare the time integrators' PER-STEP costs, each
+at its own ``dt``: the explicit pseudo-transient step at its
+stability-limit ``dt`` vs the implicit (cg / Helmholtz-shifted mgcg)
+pressure solve at ``10x`` that ``dt`` — so an implicit step covering 10x
+the simulated time needs only its ms/step to stay under 10x the explicit
+ms/step to win.  Rows report time/step, per-step solve iterations, and
+the ``hide_apply`` operator-overlap on/off delta.
 """
 
 import time
@@ -17,19 +25,20 @@ import numpy as np
 def measure_single_device(n=96, nt=5):
     import jax.numpy as jnp
 
+    from repro import fields
     from repro.apps.twophase import TwoPhase3D
 
     app = TwoPhase3D(nx=n, ny=n, nz=n, dims=(1, 1, 1), hide=None,
                      dtype=jnp.float32)
-    Pe, phi = app.init_fields()
-    Pe, phi = app.run(2, Pe, phi)
+    S = app.init_fields()
+    S, _ = app.run(2, S)
     t0 = time.perf_counter()
-    Pe, phi = app.run(nt, Pe, phi)
+    S, _ = app.run(nt, S)
     dt = (time.perf_counter() - t0) / nt
 
     # NumPy baseline of the identical update
-    Pe_n = np.asarray(app.grid.gather(Pe), np.float32)
-    phi_n = np.asarray(app.grid.gather(phi), np.float32)
+    Pe_n = np.asarray(fields.gather(S.Pe), np.float32)
+    phi_n = np.asarray(fields.gather(S.phi), np.float32)
     dx = dy = dz = np.float32(app.dx)
 
     def np_step(Pe, phi):
@@ -61,6 +70,31 @@ def measure_single_device(n=96, nt=5):
     return dict(n=n, step_s=dt, numpy_step_s=dt_np, xla_speedup=dt_np / dt)
 
 
+def measure_methods(n=28, nt=3):
+    """Per-integrator rows: time/step, per-step solve iterations, and the
+    implicit dt (10x the explicit stability limit) vs the explicit dt."""
+    import jax.numpy as jnp
+
+    from repro.apps.twophase import TwoPhase3D
+
+    base = dict(nx=n, ny=n, nz=n, dims=(1, 1, 1), hide=None,
+                dtype=jnp.float32, tol=1e-5)
+    rows = []
+    for method, overlap in [("explicit", False), ("cg", False),
+                            ("cg", True), ("mgcg", False), ("mgcg", True)]:
+        app = TwoPhase3D(**base, method=method, overlap=overlap)
+        S = app.init_fields()
+        S, _ = app.run(1, S)                      # compile + warm up
+        t0 = time.perf_counter()
+        S, infos = app.run(nt, S)
+        step_s = (time.perf_counter() - t0) / nt
+        iters = (sum(i.iterations for i in infos) / len(infos)
+                 if infos else float("nan"))
+        rows.append(dict(method=method, overlap=overlap, dt=app.dt,
+                         step_s=step_s, iters=iters))
+    return rows
+
+
 def model_efficiency(n_local=382, dtype_bytes=8, hide=True):
     cells = n_local ** 3
     t_comp = cells * 7 * dtype_bytes / 819e9
@@ -75,6 +109,12 @@ def run(quick=True):
     print(f" single-device (CPU) {m['n']}^3: {m['step_s']*1e3:.1f} ms/step; "
           f"NumPy baseline {m['numpy_step_s']*1e3:.1f} ms "
           f"(XLA speedup {m['xla_speedup']:.2f}x; paper: Julia at 90% of CUDA C)")
+    print(" integrator comparison (implicit dt = 10x the explicit limit):")
+    print("  method    overlap       dt     iters/step    ms/step")
+    for r in measure_methods(n=28 if quick else 48, nt=3 if quick else 6):
+        it = "-" if r["iters"] != r["iters"] else f"{r['iters']:.1f}"
+        print(f"  {r['method']:<9s} {str(r['overlap']):<7s} "
+              f"{r['dt']:9.2e}  {it:>9s}  {r['step_s']*1e3:9.1f}")
     print(" v5e roofline weak-scaling model (local 382^3, f64):")
     print("  P      eff(no hide)  eff(hide)")
     for p in [1, 8, 64, 512, 1024]:

@@ -2,6 +2,7 @@
 (Fig 3), Gross-Pitaevskii (ref [4]), and the variable-coefficient Poisson
 solver showcase — built on the implicit global grid."""
 
-from . import heat3d, twophase, gross_pitaevskii, poisson
+from . import heat3d, twophase, twophase_ops, gross_pitaevskii, poisson, stokes
 
-__all__ = ["heat3d", "twophase", "gross_pitaevskii", "poisson"]
+__all__ = ["heat3d", "twophase", "twophase_ops", "gross_pitaevskii",
+           "poisson", "stokes"]

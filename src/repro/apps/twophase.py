@@ -3,20 +3,38 @@
 A faithful-in-kind reduction of the solver scaled to 1024 GPUs in the
 paper (Räss et al. hydro-mechanical two-phase flow): effective pressure
 ``Pe`` and porosity ``phi`` coupled through a porosity-dependent Darcy
-flux and viscous (de)compaction, advanced with pseudo-transient
-iterations on a regular staggered grid — fluxes live on cell faces,
-scalars at centers.  Each iteration updates the halos of the two scalar
-fields (the fluxes never need halos: they are consumed immediately by a
-divergence on interior cells), exactly as in the production solver.
+flux and viscous (de)compaction on a regular staggered grid — fluxes on
+cell faces, scalars at centers, all first-class :mod:`repro.fields`
+citizens (``init_fields`` returns a center ``FieldSet``, :meth:`fluxes`
+the face-located Darcy flux ``FieldSet``).
 
-    qx,qy,qz = -k(phi)^npow * d(Pe)/dxi            (faces)
-    dPe      = div q - Pe / (eta_phi(phi))         (centers)
-    dphi     = (1 - phi) * Pe / eta_phi(phi)
+    qx,qy,qz = -k(phi) * (d(Pe)/dxi - delta_z)     (faces; unit buoyancy)
+    dPe/dt   = -div q - Pe / eta_phi(phi)          (centers)
+    dphi/dt  = (1 - phi) * Pe / eta_phi(phi)
 
-The nonlinear coefficients k(phi) = (phi/phi0)^npow and
-eta_phi = eta0/phi0 * (phi0/phi)^m reproduce the solver's nonlinearity
-structure; constants are normalized (the paper reports scaling, not
-physics numbers).
+with ``k(phi) = (phi/phi0)^npow`` and ``eta_phi = eta0/phi0 * (phi0/phi)^m``.
+
+Two time integrators (``method=``):
+
+* ``"explicit"`` — the paper-style pseudo-transient relaxation: one fused
+  stencil sweep per step (with ``@hide_communication`` overlap), but the
+  parabolic pressure operator restricts ``dt < dx^2 / (6 k_max)``, which
+  collapses under grid refinement — the restriction that caps every
+  two-phase benchmark at scale.
+* ``"cg"`` / ``"mgcg"`` — implicit (backward-Euler) pressure: each step
+  solves the SPD Helmholtz-like system of
+  :mod:`repro.apps.twophase_ops` with matrix-free
+  :func:`repro.solvers.cg.cg`, optionally preconditioned by the
+  multigrid :class:`repro.solvers.preconditioner.CyclePreconditioner`,
+  with ``overlap=True`` hiding the operator's halo exchange behind the
+  bulk stencil.  No stability limit: ``dt`` is accuracy-limited only
+  (tested at >= 10x the explicit limit), and both integrators agree to
+  O(dt) (verified step-for-step at small ``dt`` in
+  ``tests/test_twophase_implicit.py``).
+
+The porosity is advanced with the new pressure (semi-implicit coupling);
+nonlinear coefficients are frozen at the old porosity, exactly like the
+production solver's Picard linearization.
 """
 
 from __future__ import annotations
@@ -27,12 +45,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import init_global_grid
+from repro import fields as flds
+from repro import solvers
+from repro.fields import Field, FieldSet
 from repro.stencil import fd3d as fd
+from .twophase_ops import darcy_flux, pressure_apply, pressure_rhs
+
+METHODS = ("explicit", "cg", "mgcg")
 
 
 @dataclasses.dataclass
 class TwoPhase3D:
-    nx: int = 32
+    nx: int = 32            # local extents INCLUDING the halo cells
     ny: int = 32
     nz: int = 32
     phi0: float = 0.01
@@ -40,29 +64,52 @@ class TwoPhase3D:
     m: float = 1.0
     eta0: float = 1.0
     lx: float = 10.0
-    dt: float = 1e-2
-    hide: tuple | None = (8, 2, 2)
+    dt: float | None = None  # None: dt_limit (explicit) / 10x dt_limit (implicit)
+    method: str = "explicit"
+    tol: float = 1e-8        # implicit per-step relative solve tolerance
+    maxiter: int = 500       # implicit per-step CG iteration cap
+    overlap: bool = False    # hide_apply overlap on the implicit operator
+    hide: tuple | None = (8, 2, 2)   # explicit-step communication hiding
+    periodic: tuple = (False, False, False)
     dims: tuple | None = None
+    mesh: object = None      # optional explicit device mesh (subset runs)
     dtype: object = jnp.float64
 
     def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; pick from {METHODS}")
+        if self.method != "explicit" and any(self.periodic):
+            raise ValueError(
+                "implicit methods treat the boundary ring as Dirichlet data; "
+                "periodic dims are only supported with method='explicit'")
         self.grid = init_global_grid(self.nx, self.ny, self.nz,
-                                     dims=self.dims, dtype=self.dtype)
+                                     dims=self.dims, mesh=self.mesh,
+                                     periodic=self.periodic, dtype=self.dtype)
         g = self.grid
         self.dx = self.lx / (g.nx_g() - 1)
         self.dy = self.lx / (g.ny_g() - 1)
         self.dz = self.lx / (g.nz_g() - 1)
+        self.spacing = (self.dx, self.dy, self.dz)
         # explicit pseudo-transient stability: dt < dx^2 / (6 k_max) with
         # k_max = (phi_max/phi0)^npow = 4^npow for the 3x-amplitude seed
         k_max = 4.0 ** self.npow
-        self.dt = min(self.dt,
-                      0.2 * min(self.dx, self.dy, self.dz) ** 2 / (6.0 * k_max))
+        self.dt_limit = 0.2 * min(self.spacing) ** 2 / (6.0 * k_max)
+        if self.dt is None:
+            self.dt = self.dt_limit if self.method == "explicit" \
+                else 10.0 * self.dt_limit
+        elif self.method == "explicit":
+            self.dt = min(self.dt, self.dt_limit)
         dx, dy, dz, dt = self.dx, self.dy, self.dz, self.dt
         phi0, npow, m, eta0 = self.phi0, self.npow, self.m, self.eta0
 
+        def inv_eta(phi):
+            return (phi0 / eta0) * (phi / phi0) ** m
+
+        self._inv_eta = inv_eta
+
         def step(Pe, phi):
             k = (phi / phi0) ** npow                      # permeability
-            eta = (eta0 / phi0) * (phi0 / phi) ** m       # compaction viscosity
+            ie = inv_eta(phi)                             # 1 / eta_phi
             kx = fd.av_xi(k)
             ky = fd.av_yi(k)
             kz = fd.av_zi(k)
@@ -76,9 +123,9 @@ class TwoPhase3D:
             )  # (nx-2, ny-2, nz-2)
             pe_i = fd.inn(Pe)
             phi_i = fd.inn(phi)
-            eta_i = fd.inn(eta)
-            dPe = -divq - pe_i / eta_i
-            dphi = (1.0 - phi_i) * pe_i / eta_i
+            ie_i = fd.inn(ie)
+            dPe = -divq - pe_i * ie_i
+            dphi = (1.0 - phi_i) * pe_i * ie_i
             Pe2 = Pe.at[1:-1, 1:-1, 1:-1].set(pe_i + dt * dPe)
             phi2 = phi.at[1:-1, 1:-1, 1:-1].set(
                 jnp.clip(phi_i + dt * dphi, 1e-4, 0.25)
@@ -86,26 +133,94 @@ class TwoPhase3D:
             return Pe2, phi2
 
         self._single_step = step
+        inner = (slice(1, -1),) * 3
+
+        def fstep(S):
+            Pe2, phi2 = step(S.Pe.data, S.phi.data)
+            return FieldSet(Pe=S.Pe.with_data(Pe2), phi=S.phi.with_data(phi2))
+
         if self.hide is not None:
-            local = self.grid.local_shape
-            hide = tuple(
+            local = g.local_shape
+            width = tuple(
                 max(1, min(w, local[d] // 2 - 1))
                 for d, w in enumerate(self.hide)
             )
 
             @g.parallel
-            def dstep(Pe, phi):
-                return g.hide(step, (Pe, phi), width=hide)
+            def dstep(S):
+                return flds.hide_step(g, fstep, S, width=width)
         else:
 
             @g.parallel
-            def dstep(Pe, phi):
-                Pe2, phi2 = step(Pe, phi)
-                return g.update_halo(Pe2, phi2)
+            def dstep(S):
+                return flds.update_halo(g, fstep(S))
 
-        self._step = dstep
+        self._explicit_step = dstep
 
-    def init_fields(self):
+        @g.parallel
+        def assemble(Pe, phi):
+            k = (phi.data / phi0) ** npow
+            diag = 1.0 / dt + inv_eta(phi.data)
+            rhs = pressure_rhs(Pe.data, k, dt, dz)
+            return k, diag, Pe.with_data(rhs)
+
+        self._assemble = assemble
+
+        @g.parallel
+        def phi_update(phi, Pe):
+            ie = inv_eta(phi.data)
+            phi2 = jnp.clip(
+                phi.data[inner]
+                + dt * (1.0 - phi.data[inner]) * Pe.data[inner] * ie[inner],
+                1e-4, 0.25)
+            return phi.with_data(g.update_halo(phi.data.at[inner].set(phi2)))
+
+        self._phi_update = phi_update
+
+    # ------------------------------------------------------------------
+    # implicit pressure operator (local view) + solve
+    # ------------------------------------------------------------------
+    def apply_A(self, u: Field, k, diag) -> Field:
+        """Backward-Euler pressure operator on a center Field (local view)."""
+        return u.with_data(pressure_apply(self.grid, u.data, k, diag,
+                                          self.spacing))
+
+    def apply_A_overlap(self, u: Field, k, diag) -> Field:
+        """Same operator with the halo exchange overlapped against the
+        bulk stencil (``hide_apply``); identical arithmetic (shell cells
+        may round differently by ~1 ulp)."""
+        return u.with_data(pressure_apply(self.grid, u.data, k, diag,
+                                          self.spacing, hide=True))
+
+    def _precond(self):
+        if not hasattr(self, "_mg_precond"):
+            # the cycle must see the 1/dt + 1/eta diagonal (args[1]):
+            # a pure Poisson cycle mis-preconditions the shifted operator
+            self._mg_precond = solvers.CyclePreconditioner(
+                self.grid, self.spacing, helmholtz_shift=True)
+        return self._mg_precond
+
+    def pressure_solve(self, S: FieldSet, tol: float | None = None,
+                       maxiter: int | None = None):
+        """One implicit pressure solve ``A Pe^{n+1} = Pe^n/dt - G``.
+
+        Coefficients are assembled from ``S`` (one parallel call), then
+        the whole Krylov loop runs as one compiled program, warm-started
+        from the old pressure.  Returns ``(Pe, SolveInfo)``.
+        """
+        k, diag, rhs = self._assemble(S.Pe, S.phi)
+        apply_A = self.apply_A_overlap if self.overlap else self.apply_A
+        return solvers.cg(
+            self.grid, apply_A, rhs, x0=S.Pe,
+            tol=self.tol if tol is None else tol,
+            maxiter=self.maxiter if maxiter is None else maxiter,
+            apply_M=self._precond() if self.method == "mgcg" else None,
+            args=(k, diag))
+
+    # ------------------------------------------------------------------
+    # time stepping
+    # ------------------------------------------------------------------
+    def init_fields(self) -> FieldSet:
         """Gaussian porosity perturbation (the porosity-wave seed)."""
         g = self.grid
         cx, cy, cz = g.nx_g() / 2, g.ny_g() / 2, g.nz_g() / 4
@@ -116,32 +231,128 @@ class TwoPhase3D:
             ) ** 2
             return self.phi0 * (1.0 + 3.0 * jnp.exp(-r2 / 0.5))
 
-        phi = g.from_global_fn(phi_fn)
-        Pe = g.zeros()
-        return Pe, phi
+        return FieldSet(Pe=flds.zeros(g, "center", self.dtype),
+                        phi=flds.from_global_fn(g, phi_fn, "center"))
 
-    def run(self, nt: int, Pe=None, phi=None):
-        if Pe is None:
-            Pe, phi = self.init_fields()
+    def step(self, S: FieldSet):
+        """Advance one ``dt``.  Returns ``(state, SolveInfo | None)``."""
+        if self.method == "explicit":
+            return self._explicit_step(S), None
+        Pe, info = self.pressure_solve(S)
+        phi = self._phi_update(S.phi, Pe)
+        return FieldSet(Pe=Pe, phi=phi), info
+
+    def run(self, nt: int, S: FieldSet | None = None):
+        """Advance ``nt`` steps.  Returns ``(state, [SolveInfo, ...])``
+        (the per-step solve infos; empty for the explicit integrator)."""
+        if S is None:
+            S = self.init_fields()
+        infos = []
         for _ in range(nt):
-            Pe, phi = self._step(Pe, phi)
-        Pe.block_until_ready()
-        return Pe, phi
+            S, info = self.step(S)
+            if info is not None:
+                infos.append(info)
+        S.Pe.data.block_until_ready()
+        return S, infos
 
-    def oracle(self, nt: int):
-        """NumPy reference on the deduplicated global grid."""
+    def fluxes(self, S: FieldSet) -> FieldSet:
+        """Staggered Darcy fluxes of ``S`` as a halo-updated face FieldSet."""
         g = self.grid
-        Pe0, phi0_ = self.init_fields()
-        Pe = g.gather(Pe0).astype(np.float64)
-        phi = g.gather(phi0_).astype(np.float64)
-        import jax
+        if not hasattr(self, "_flux_fn"):
+            phi0, npow = self.phi0, self.npow
+            spacing = self.spacing
 
-        step = jax.jit(self._single_step)
+            @g.parallel
+            def flux(S):
+                k = (S.phi.data / phi0) ** npow
+                qx, qy, qz = darcy_flux(S.Pe.data, k, spacing)
+                return flds.update_halo(g, FieldSet(
+                    qx=Field(g, qx, "xface"),
+                    qy=Field(g, qy, "yface"),
+                    qz=Field(g, qz, "zface")))
+
+            self._flux_fn = flux
+        return self._flux_fn(S)
+
+    # ------------------------------------------------------------------
+    # NumPy oracle on the deduplicated global grid
+    # ------------------------------------------------------------------
+    def oracle(self, nt: int, cg_tol: float = 1e-12):
+        """Single-array reference: the same integrator (explicit forward
+        Euler, or backward Euler via an independent NumPy CG) on the
+        gathered global grid.  Returns ``(Pe, phi)`` NumPy arrays."""
+        S = self.init_fields()
+        Pe = flds.gather(S.Pe).astype(np.float64)
+        phi = flds.gather(S.phi).astype(np.float64)
+        if self.method == "explicit":
+            import jax
+
+            step = jax.jit(self._single_step)
+            for _ in range(nt):
+                Pe_j, phi_j = step(jnp.asarray(Pe), jnp.asarray(phi))
+                Pe, phi = np.asarray(Pe_j), np.asarray(phi_j)
+            return Pe, phi
         for _ in range(nt):
-            Pe_j, phi_j = step(jnp.asarray(Pe), jnp.asarray(phi))
-            Pe, phi = np.asarray(Pe_j), np.asarray(phi_j)
+            Pe, phi = self._np_implicit_step(Pe, phi, cg_tol)
         return Pe, phi
 
+    def _np_implicit_step(self, Pe, phi, cg_tol, maxiter=20000):
+        """One backward-Euler step in NumPy (explicit-slicing stencils)."""
+        dt, dz = self.dt, self.dz
+        h2 = np.asarray(self.spacing, np.float64) ** 2
+        inner = (slice(1, -1),) * 3
+        k = (phi / self.phi0) ** self.npow
+        ie = (self.phi0 / self.eta0) * (phi / self.phi0) ** self.m
+        diag = 1.0 / dt + ie
+        kz = 0.5 * (k[1:-1, 1:-1, 1:] + k[1:-1, 1:-1, :-1])
+        G = np.diff(kz, axis=2) / dz
+        b = np.zeros_like(Pe)
+        b[inner] = Pe[inner] / dt - G
+
+        def A(u):
+            u0 = u[inner]
+            k0 = k[inner]
+            acc = np.zeros_like(u0)
+            for d in range(3):
+                sl_p = [slice(1, -1)] * 3
+                sl_m = [slice(1, -1)] * 3
+                sl_p[d] = slice(2, None)
+                sl_m[d] = slice(None, -2)
+                kf_p = 0.5 * (k0 + k[tuple(sl_p)])
+                kf_m = 0.5 * (k0 + k[tuple(sl_m)])
+                acc += (kf_p * (u[tuple(sl_p)] - u0)
+                        - kf_m * (u0 - u[tuple(sl_m)])) / h2[d]
+            out = np.zeros_like(u)
+            out[inner] = diag[inner] * u0 - acc
+            return out
+
+        u = Pe.copy()                     # warm start; ring holds the BC (0)
+        r = np.zeros_like(b)
+        r[inner] = (b - A(u))[inner]
+        p = r.copy()
+        rs = float((r[inner] ** 2).sum())
+        bn = float((b[inner] ** 2).sum()) ** 0.5 or 1.0
+        for _ in range(maxiter):
+            if rs ** 0.5 <= cg_tol * bn:
+                break
+            Ap = A(p)
+            alpha = rs / float((p[inner] * Ap[inner]).sum())
+            u += alpha * p
+            r[inner] -= alpha * Ap[inner]
+            rs_new = float((r[inner] ** 2).sum())
+            p = r + (rs_new / rs) * p
+            rs = rs_new
+        Pe2 = Pe.copy()
+        Pe2[inner] = u[inner]
+        phi2 = phi.copy()
+        phi2[inner] = np.clip(
+            phi[inner] + dt * (1.0 - phi[inner]) * u[inner] * ie[inner],
+            1e-4, 0.25)
+        return Pe2, phi2
+
+    # ------------------------------------------------------------------
+    # roofline bookkeeping (benchmarks)
+    # ------------------------------------------------------------------
     def bytes_per_step_per_cell(self) -> int:
         # read Pe, phi (+k/eta fused), write Pe2, phi2 (+ flux traffic ~3x)
         return 7 * np.dtype(self.dtype).itemsize

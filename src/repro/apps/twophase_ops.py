@@ -1,0 +1,80 @@
+"""Matrix-free operators for the implicit two-phase pressure solve.
+
+The backward-Euler step of the effective-pressure equation (see
+:mod:`repro.apps.twophase`) solves, with the nonlinear coefficients
+``k = k(phi^n)`` and ``eta = eta_phi(phi^n)`` frozen at the old porosity,
+
+    (1/dt + 1/eta) Pe^{n+1} - div( k grad Pe^{n+1} ) = Pe^n / dt - G
+
+where ``G = d/dz (k_zface)`` is the divergence of the buoyancy part of the
+Darcy flux.  The left-hand side is a variable-coefficient *Helmholtz-like*
+operator: the flux-form Poisson stencil of :mod:`repro.solvers.multigrid`
+plus a positive diagonal ``1/dt + 1/eta`` — symmetric positive definite
+for any ``dt > 0``, which is what lets :func:`repro.solvers.cg.cg` (plain
+or multigrid-preconditioned) solve each step to tolerance with no
+``dt < dx^2 / (6 k_max)`` stability restriction.
+
+Everything here is a pure local-view function (inside ``shard_map``),
+shape-polymorphic so :func:`repro.core.hide.hide_apply` can overlap the
+halo exchange of the operator input with the bulk stencil.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.grid import ImplicitGlobalGrid
+from repro.fields import ops as fops
+from repro.solvers.multigrid import poisson_apply
+
+
+def _inner(nd: int) -> tuple:
+    return (slice(1, -1),) * nd
+
+
+def pressure_apply(grid: ImplicitGlobalGrid, u, k, diag, spacing,
+                   update_halo=True, hide=False):
+    """Implicit pressure operator ``diag*u - div(k grad u)``; zero ring.
+
+    A thin wrapper over the flux-form
+    :func:`repro.solvers.multigrid.poisson_apply` with the Helmholtz
+    ``shift`` bound to ``diag = 1/dt + 1/eta_phi`` — the SAME stencil
+    the multigrid cycle smooths, so the Krylov operator and its
+    preconditioner can never drift apart arithmetically.  ``k``/``diag``
+    must be halo-consistent (they are pointwise functions of the
+    halo-consistent porosity); the face coefficients (arithmetic averages
+    of adjacent cells) match the explicit scheme's ``av_xi(k)`` fluxes.
+
+    ``hide=True`` overlaps the halo exchange of ``u`` with the stencil on
+    the locally valid bulk via :func:`repro.core.hide.hide_apply` (same
+    arithmetic; shell cells may round differently by ~1 ulp).
+    """
+    return poisson_apply(grid, u, k, spacing, update_halo=update_halo,
+                         hide=hide, shift=diag)
+
+
+def pressure_rhs(Pe, k, dt, dz):
+    """Backward-Euler right-hand side ``Pe/dt - d_z(k_zface)``; zero ring.
+
+    The buoyancy divergence ``G`` is assembled with the location-aware
+    ops (center -> z-face average, z-face -> center difference), matching
+    the explicit scheme's ``d_za(av_zi(k)) / dz`` on the interior.
+    """
+    nd = Pe.ndim
+    G = fops.diff_to_center(fops.avg_to_face(k, 2), 2, dz)
+    return jnp.zeros_like(Pe).at[_inner(nd)].set(
+        Pe[_inner(nd)] / dt - G[_inner(nd)])
+
+
+def darcy_flux(Pe, k, spacing, buoyancy=1.0):
+    """Staggered Darcy fluxes ``q = -k_face (grad Pe - buoyancy e_z)``.
+
+    Returns raw ``(qx, qy, qz)`` face arrays (shape-uniform staggering,
+    dead planes zero because the face-averaged ``k`` is zero there); wrap
+    them as face Fields and halo-update before gathering.
+    """
+    qx = -fops.avg_to_face(k, 0) * fops.diff_to_face(Pe, 0, spacing[0])
+    qy = -fops.avg_to_face(k, 1) * fops.diff_to_face(Pe, 1, spacing[1])
+    kz = fops.avg_to_face(k, 2)
+    qz = -kz * (fops.diff_to_face(Pe, 2, spacing[2]) - buoyancy)
+    return qx, qy, qz

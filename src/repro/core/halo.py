@@ -74,10 +74,16 @@ def update_halo(
     ``locations`` optionally gives each array's staggering location
     (``repro.fields`` convention: ``"center"``/``"xface"``/...).  Under
     shape-uniform staggering, face index ``i`` is aligned with center
-    index ``i``, so the exchange mechanics are location-independent; the
-    one genuine difference is periodicity: a face field staggered along a
-    periodic dim would need its wraparound shifted past the dead plane,
-    which is not supported and rejected here.
+    index ``i``, so the exchange mechanics are location-independent —
+    including periodic wraparound, which is dead-plane-safe by
+    construction: the send slabs ``[h, 2h)`` / ``[n-2h, n-h)`` never
+    include the staggered dead plane (globally ``N-1``, always among the
+    outermost ``h`` halo planes of the last blocks), and the periodic
+    identification ``i == i +- (N - 2h)`` holds for faces exactly as for
+    centers (faces and centers share the period).  The wraparound
+    therefore fills the formerly dead plane with its live wrapped copy
+    (global face ``N-1`` == face ``2h-1``), which is exactly what face
+    stencils reading that halo plane need.
     """
     dims = tuple(dims) if dims is not None else tuple(range(topo.ndims))
     if locations is not None and len(locations) != len(arrays):
@@ -86,11 +92,6 @@ def update_halo(
     for loc in locations or ():
         if loc not in _STAGGER_DIM:
             raise ValueError(f"unknown staggering location {loc!r}")
-        sd = _STAGGER_DIM[loc]
-        if sd is not None and sd in dims and topo.periodic[sd]:
-            raise ValueError(
-                f"halo exchange of a {loc!r} field along periodic dim {sd} "
-                "is not supported (wraparound would cross the dead plane)")
     out = []
     for A in arrays:
         off = A.ndim - topo.ndims

@@ -325,9 +325,11 @@ def update_halo(grid: ImplicitGlobalGrid, tree, width: int | None = None):
     """Location-aware halo exchange of a pytree of Fields/arrays.
 
     Shape-uniform staggering makes the exchange mechanics identical for
-    every location (see :mod:`repro.core.halo`); this wrapper forwards the
-    per-array locations so staggered fields on periodic dims are rejected
-    (their wraparound would have to skip the dead plane — unsupported).
+    every location (see :mod:`repro.core.halo`), periodic dims included:
+    the wraparound is dead-plane-safe (the send slabs never contain the
+    dead plane, and faces share the centers' periodic identification
+    ``i == i +- (N - overlap)``), so a face Field on a periodic dim gets
+    its formerly dead plane filled with the live wrapped face.
     """
     w = grid.halo if width is None else width
 
@@ -346,21 +348,10 @@ def hide_step(grid: ImplicitGlobalGrid, step_fn, fset, width=(16, 2, 2)):
     ``step_fn(fset) -> fset`` maps a FieldSet to an updated FieldSet of
     the same structure; the boundary-shell/interior split and overlapped
     halo exchange of :func:`repro.core.hide.hide_communication` are
-    applied to the underlying arrays.  Staggered fields on periodic dims
-    are rejected exactly as in :func:`update_halo` (the internal exchange
-    would misalign across the dead plane).
+    applied to the underlying arrays.  Periodic dims work for every
+    location — the internal exchange's wraparound is dead-plane-safe
+    exactly as in :func:`update_halo`.
     """
-    def check(node):
-        if _is_field(node):
-            sd = node.stagger_dim
-            if sd is not None and grid.topo.periodic[sd]:
-                raise ValueError(
-                    f"hide_step of a {node.loc!r} field along periodic dim "
-                    f"{sd} is not supported (wraparound would cross the "
-                    "dead plane)")
-        return node
-
-    map_fields(check, fset)
     leaves, treedef = jax.tree_util.tree_flatten(fset)
 
     def raw_step(*arrays):

@@ -86,8 +86,12 @@ def _shift(a, d: int, s: int):
 # flux-form variable-coefficient Poisson operator (local view)
 # ---------------------------------------------------------------------------
 
-def _poisson_stencil(u, c, spacing):
-    """The flux-form stencil of halo-consistent ``u`` (no communication)."""
+def _poisson_stencil(u, c, spacing, shift=None):
+    """The flux-form stencil of halo-consistent ``u`` (no communication).
+
+    ``shift`` (optional cell-centered field) adds a Helmholtz diagonal:
+    ``shift * u - div(c grad u)``.
+    """
     nd = u.ndim
     u0 = u[_inner(nd)]
     c0 = c[_inner(nd)]
@@ -98,15 +102,20 @@ def _poisson_stencil(u, c, spacing):
         cf_p = 0.5 * (c0 + cp)
         cf_m = 0.5 * (c0 + cm)
         acc = acc + (cf_p * (up - u0) - cf_m * (u0 - um)) / spacing[d] ** 2
-    return jnp.zeros_like(u).at[_inner(nd)].set(-acc)
+    out = -acc if shift is None else shift[_inner(nd)] * u0 - acc
+    return jnp.zeros_like(u).at[_inner(nd)].set(out)
 
 
 def poisson_apply(grid: ImplicitGlobalGrid, u, c, spacing,
-                  update_halo=True, hide=False):
+                  update_halo=True, hide=False, shift=None):
     """``A u = -div(c grad u)`` on the interior, zero on the ring.
 
     ``c`` is the cell-centered coefficient (halo-consistent); face
     coefficients are arithmetic averages of the two adjacent cells.
+    ``shift`` (optional halo-consistent cell-centered field) makes the
+    operator Helmholtz-like: ``A u = shift * u - div(c grad u)`` — e.g.
+    an implicit time step's ``1/dt + 1/eta``
+    (:mod:`repro.apps.twophase_ops`).
 
     ``hide=True`` overlaps the halo exchange of ``u`` with the stencil on
     the locally valid bulk via :func:`repro.core.hide.hide_apply` (same
@@ -119,12 +128,17 @@ def poisson_apply(grid: ImplicitGlobalGrid, u, c, spacing,
             raise ValueError("hide=True already includes the halo update")
         if grid.halo != 1:
             raise ValueError("hide=True requires halo width 1 (3-point stencil)")
+        if shift is None:
+            return _hide.hide_apply(
+                grid.topo, lambda uu, cc: _poisson_stencil(uu, cc, spacing),
+                u, c, halo=grid.halo)
         return _hide.hide_apply(
-            grid.topo, lambda uu, cc: _poisson_stencil(uu, cc, spacing),
-            u, c, halo=grid.halo)
+            grid.topo,
+            lambda uu, cc, ss: _poisson_stencil(uu, cc, spacing, ss),
+            u, c, shift, halo=grid.halo)
     if update_halo:
         u = grid.update_halo(u)
-    return _poisson_stencil(u, c, spacing)
+    return _poisson_stencil(u, c, spacing, shift)
 
 
 def poisson_diag(c, spacing):
@@ -253,6 +267,7 @@ def make_v_cycle(
     hs,
     cs,
     *,
+    shifts=None,
     nu_pre: int = 2,
     nu_post: int = 2,
     omega: float = 6.0 / 7.0,
@@ -267,6 +282,15 @@ def make_v_cycle(
     halo-consistent iterate and a zero-ring right-hand side;
     ``residual(level, u, f)`` is ``f - A u`` with a zero ring.
 
+    ``shifts`` (optional) are per-level halo-consistent cell-centered
+    fields ``s >= 0`` turning the operator Helmholtz-like:
+    ``A u = s u - div(c grad u)`` — e.g. the ``1/dt + 1/eta`` shift of an
+    implicit time step (:mod:`repro.apps.twophase_ops`).  Build them with
+    :func:`build_coefficients` like the coefficients; the shift joins the
+    smoother diagonal, so the analytic Chebyshev bound ``lam_max = 2`` on
+    ``D^-1 A`` still holds (the off-diagonal row sum stays <= the
+    unshifted diagonal).
+
     ``smoother`` selects damped Jacobi or the 3-term Chebyshev smoother
     for the pre/post sweeps (``nu_pre``/``nu_post`` = sweeps resp.
     polynomial degree); the coarsest level always uses Jacobi sweeps.
@@ -275,11 +299,14 @@ def make_v_cycle(
         raise ValueError(f"unknown smoother {smoother!r}; pick from {SMOOTHERS}")
     nd = grid.ndims
     dias = [poisson_diag(ck, hk) for ck, hk in zip(cs, hs)]
+    if shifts is not None:
+        dias = [dk + sk[_inner(nd)] for dk, sk in zip(dias, shifts)]
 
     def residual(level, u, f):
         """f - A u on the interior, zero ring (u halo-consistent)."""
         Au = poisson_apply(grids[level], u, cs[level], hs[level],
-                           update_halo=False)
+                           update_halo=False,
+                           shift=None if shifts is None else shifts[level])
         r = f[_inner(nd)] - Au[_inner(nd)]
         return jnp.zeros_like(u).at[_inner(nd)].set(r)
 

@@ -47,6 +47,13 @@ class CyclePreconditioner:
     ``setup`` receives the same local-view operands as ``apply_A`` and
     binds the first one as the coefficient (a ``repro.fields.Field`` or a
     raw center array).
+
+    ``helmholtz_shift=True`` additionally binds the SECOND operator arg
+    as a cell-centered diagonal shift ``s``, so the cycle targets the
+    Helmholtz-like operator ``s z - div(c grad z) = r`` — required when
+    the Krylov operator carries a dominant shift (an implicit time step's
+    ``1/dt + 1/eta``): preconditioning such an operator with the pure
+    Poisson cycle is *worse* than no preconditioner at all.
     """
 
     def __init__(
@@ -61,6 +68,7 @@ class CyclePreconditioner:
         coarse_sweeps: int = 50,
         max_levels: int | None = None,
         smoother: str = "jacobi",
+        helmholtz_shift: bool = False,
     ):
         if grid.halo != 1:
             raise ValueError("multigrid assumes halo width 1 (overlap=2)")
@@ -77,14 +85,24 @@ class CyclePreconditioner:
                 f"grid {grid.local_shape} cannot coarsen; multigrid needs >= 2 levels")
         self.hs = level_spacings(grid, self.grids, spacing)
         self.ncycles = int(ncycles)
+        self.helmholtz_shift = bool(helmholtz_shift)
         self.kw = dict(nu_pre=nu_pre, nu_post=nu_post, omega=omega,
                        coarse_sweeps=coarse_sweeps, smoother=smoother)
 
-    def setup(self, c, *_unused):
-        """Build ``M`` from the local-view coefficient (once per solve)."""
+    def setup(self, c, *rest):
+        """Build ``M`` from the local-view operands (once per solve)."""
         c = getattr(c, "data", c)  # accept a repro.fields Field
         cs = build_coefficients(self.grid, self.grids, c)
-        v_cycle, _ = make_v_cycle(self.grid, self.grids, self.hs, cs, **self.kw)
+        shifts = None
+        if self.helmholtz_shift:
+            if not rest:
+                raise ValueError(
+                    "helmholtz_shift=True needs the shift field as the "
+                    "second operator arg (args=(c, shift, ...))")
+            shifts = build_coefficients(
+                self.grid, self.grids, getattr(rest[0], "data", rest[0]))
+        v_cycle, _ = make_v_cycle(self.grid, self.grids, self.hs, cs,
+                                  shifts=shifts, **self.kw)
 
         def M(r):
             def one(leaf):

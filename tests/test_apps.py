@@ -42,16 +42,18 @@ def test_twophase_matches_oracle():
         """
 jax.config.update("jax_enable_x64", True)
 from repro.apps.twophase import TwoPhase3D
+from repro import fields
 
 for hide in (None, (2, 2, 2)):
     app = TwoPhase3D(nx=16, ny=12, nz=12, dims=(2, 2, 2), hide=hide)
-    Pe, phi = app.run(5)
+    S, infos = app.run(5)
+    assert infos == []  # explicit integrator: no per-step solves
     Pe_ref, phi_ref = app.oracle(5)
-    assert np.abs(app.grid.gather(Pe) - Pe_ref).max() < 1e-11
-    assert np.abs(app.grid.gather(phi) - phi_ref).max() < 1e-11
+    assert np.abs(fields.gather(S.Pe) - Pe_ref).max() < 1e-11
+    assert np.abs(fields.gather(S.phi) - phi_ref).max() < 1e-11
     # the porosity wave does something: phi changed from its init
-    Pe0, phi0 = app.init_fields()
-    assert np.abs(app.grid.gather(phi) - app.grid.gather(phi0)).max() > 1e-8
+    S0 = app.init_fields()
+    assert np.abs(fields.gather(S.phi) - fields.gather(S0.phi)).max() > 1e-8
 print("OK")
 """,
         ndev=8,

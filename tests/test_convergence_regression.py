@@ -1,0 +1,80 @@
+"""Iteration-count regression ceilings for the preconditioned solvers.
+
+A multigrid/preconditioner regression usually does not break correctness
+— CG still converges, just slowly — so it would only show up as silently
+slower benchmarks.  These tests pin recorded iteration counts (with ~40%
+headroom) at fixed sizes so such regressions fail loudly.
+
+Recorded baselines (f64, 8 fake CPU ranks, dims=(2,2,2)):
+
+* Poisson 18^3 global (nx=10 local):      cg 54, mgcg 12
+* Stokes velocity block 14^3 (nx=8):      cg 55, mgcg 12
+* Two-phase implicit pressure @ 10x dt_limit (30x22x22): cg 9/step,
+  mgcg (Helmholtz-shifted cycle) 5/step
+"""
+
+from _mp import run
+
+
+def test_poisson_cg_mgcg_iteration_ceilings():
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.poisson import Poisson3D
+
+app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+_, cg = app.solve("cg", tol=1e-8)
+_, mgcg = app.solve("mgcg", tol=1e-8)
+print("poisson cg", cg.iterations, "mgcg", mgcg.iterations)
+assert cg.converged and mgcg.converged
+assert cg.iterations <= 75, cg.iterations        # recorded 54
+assert mgcg.iterations <= 17, mgcg.iterations    # recorded 12
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_stokes_velocity_cg_mgcg_iteration_ceilings():
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.stokes import Stokes3D
+
+app = Stokes3D(nx=8, ny=8, nz=8, dims=(2, 2, 2))
+_, cg = app.velocity_solve(precond=False, tol=1e-8)
+_, mgcg = app.velocity_solve(precond=True, tol=1e-8)
+print("stokes velocity cg", cg.iterations, "mgcg", mgcg.iterations)
+assert cg.converged and mgcg.converged
+assert cg.iterations <= 77, cg.iterations        # recorded 55
+assert mgcg.iterations <= 17, mgcg.iterations    # recorded 12
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
+    )
+
+
+def test_twophase_pressure_iteration_ceilings():
+    """The implicit pressure solve at the showcase dt (10x the explicit
+    limit) must stay cheap, and the Helmholtz-shifted MG cycle must keep
+    beating plain CG — the preconditioner contract of the flagship."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.twophase import TwoPhase3D
+
+kw = dict(nx=16, ny=12, nz=12, dims=(2, 2, 2), tol=1e-8)
+_, cg = TwoPhase3D(**kw, method="cg").run(5)
+_, mgcg = TwoPhase3D(**kw, method="mgcg").run(5)
+it_cg = max(i.iterations for i in cg)
+it_mg = max(i.iterations for i in mgcg)
+print("twophase pressure per-step: cg", it_cg, "mgcg", it_mg)
+assert all(i.converged for i in cg + mgcg)
+assert it_cg <= 14, it_cg                        # recorded 9
+assert it_mg <= 8, it_mg                         # recorded 5
+assert it_mg < it_cg
+print("OK")
+""",
+        ndev=8,
+    )

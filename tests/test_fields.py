@@ -135,7 +135,7 @@ print("OK")
     )
 
 
-def test_face_halo_consistency_and_periodic_rejection():
+def test_face_halo_consistency_and_periodic_wraparound():
     run(
         """
 jax.config.update("jax_enable_x64", True)
@@ -160,34 +160,49 @@ for i in range(Dx - 1):
     np.testing.assert_array_equal(b[i][nx - 1], b[i + 1][1])
     np.testing.assert_array_equal(b[i + 1][0], b[i][nx - 2])
 
-# staggered along a periodic dim is rejected
+# a face field staggered along a PERIODIC dim wraps dead-plane-aware:
+# the send slabs never contain the dead plane, and the periodic
+# identification i == i +- (N - 2h) holds for faces as for centers
 gp = init_global_grid(8, 8, 8, dims=(4, 2, 1), periodic=(True, False, False),
                       dtype=jnp.float64)
-fp = fields.zeros(gp, "xface", jnp.float64)
+fp = fields.scatter(gp, rng.rand(*fields.valid_global_shape(gp, "xface")),
+                    "xface")
+
 @gp.parallel
 def updp(f):
     return fields.update_halo(gp, f)
-try:
-    updp(fp)
-    raise SystemExit("expected ValueError for periodic staggered halo")
-except ValueError as e:
-    assert "periodic" in str(e)
-# ... and hide_step applies the same rejection
+
+ap = np.asarray(updp(fp).data)
+bp = ap.reshape(Dx, nx, *ap.shape[1:])
+for i in range(Dx - 1):
+    np.testing.assert_array_equal(bp[i][nx - 1], bp[i + 1][1])
+    np.testing.assert_array_equal(bp[i + 1][0], bp[i][nx - 2])
+# wraparound: first block's low halo holds the last block's inner face,
+# and the formerly dead plane (global N-1) holds the live wrapped face 1
+np.testing.assert_array_equal(bp[0][0], bp[Dx - 1][nx - 2])
+np.testing.assert_array_equal(bp[Dx - 1][nx - 1], bp[0][1])
+assert np.abs(bp[Dx - 1][nx - 1]).max() > 0  # no longer a zero dead plane
+
+# ... and hide_step accepts periodic staggered fields too
 from repro.fields import FieldSet
+
+inn = (slice(1, -1),) * 3
+
+def step(S):
+    return FieldSet(f=S.f.with_data(
+        S.f.data.at[inn].set(1.1 * S.f.data[inn])))
+
 @gp.parallel
 def hidep(f):
-    return fields.hide_step(gp, lambda S: S, FieldSet(f=f), width=(2, 2, 2))
-try:
-    hidep(fp)
-    raise SystemExit("expected ValueError for periodic staggered hide_step")
-except ValueError as e:
-    assert "periodic" in str(e)
-# ... but a face field staggered along a NON-periodic dim is fine
-fq = fields.zeros(gp, "yface", jnp.float64)
+    return fields.hide_step(gp, step, FieldSet(f=f), width=(2, 2, 2))
+
 @gp.parallel
-def updq(f):
-    return fields.update_halo(gp, f)
-updq(fq)
+def plainp(f):
+    return fields.update_halo(gp, step(FieldSet(f=f)))
+
+hp = np.asarray(hidep(fp).f.data)
+pp = np.asarray(plainp(fp).f.data)
+np.testing.assert_array_equal(hp, pp)
 print("OK")
 """,
         ndev=8,

@@ -130,6 +130,90 @@ def test_data_pipeline_pure_function_of_step(vocab, batch, seq, step):
     )
 
 
+@settings(max_examples=30, deadline=None)
+@given(
+    shape=st.tuples(st.integers(3, 9), st.integers(3, 9), st.integers(3, 9)),
+    d=st.integers(0, 2),
+    seed=st.integers(0, 10_000),
+)
+def test_fields_ops_diff_adjointness(shape, d, seed):
+    """Summation-by-parts adjointness of the staggered differences:
+    <diff_to_face(c), f> == -<c, diff_to_center(f)> whenever f's plane 0
+    and its dead plane along d vanish (homogeneous flux BCs) — the
+    discrete div = -grad^T identity every staggered solve relies on."""
+    from repro.fields.ops import diff_to_center, diff_to_face
+
+    rng = np.random.RandomState(seed)
+    c = rng.randn(*shape).astype(np.float32)
+    f = rng.randn(*shape).astype(np.float32)
+    edge = [slice(None)] * 3
+    edge[d] = np.array([0, shape[d] - 1])
+    f[tuple(edge)] = 0.0
+    h = float(0.5 + rng.rand())
+    lhs = float((np.asarray(diff_to_face(jnp.asarray(c), d, h)) * f).sum())
+    rhs = float((c * np.asarray(diff_to_center(jnp.asarray(f), d, h))).sum())
+    scale = (np.linalg.norm(c) * np.linalg.norm(f)) / h + 1.0
+    assert abs(lhs + rhs) <= 1e-4 * scale, (lhs, rhs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    shape=st.tuples(st.integers(3, 9), st.integers(3, 9), st.integers(3, 9)),
+    d=st.integers(0, 2),
+    seed=st.integers(0, 10_000),
+)
+def test_fields_ops_avg_adjointness(shape, d, seed):
+    """<avg_to_face(c), f> == <c, avg_to_center(f)> under the same
+    boundary-plane conditions (interpolation is its own transpose)."""
+    from repro.fields.ops import avg_to_center, avg_to_face
+
+    rng = np.random.RandomState(seed)
+    c = rng.randn(*shape).astype(np.float32)
+    f = rng.randn(*shape).astype(np.float32)
+    edge = [slice(None)] * 3
+    edge[d] = np.array([0, shape[d] - 1])
+    f[tuple(edge)] = 0.0
+    lhs = float((np.asarray(avg_to_face(jnp.asarray(c), d)) * f).sum())
+    rhs = float((c * np.asarray(avg_to_center(jnp.asarray(f), d))).sum())
+    scale = np.linalg.norm(c) * np.linalg.norm(f) + 1.0
+    assert abs(lhs - rhs) <= 1e-4 * scale, (lhs, rhs)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.tuples(st.integers(4, 8), st.integers(4, 8), st.integers(4, 8)),
+    loc=st.sampled_from(["xface", "yface", "zface"]),
+    seed=st.integers(0, 10_000),
+)
+def test_fields_ops_mask_consistency(shape, loc, seed):
+    """Center->face ops land exactly on the valid points of the target
+    location (dead plane zero, so out * valid_mask == out), and
+    gather/scatter round-trips the valid array, for random local shapes
+    and locations on a 1-rank grid."""
+    from repro.core import init_global_grid
+    from repro import fields
+    from repro.fields import ops
+
+    grid = init_global_grid(*shape, dims=(1, 1, 1))
+    d = fields.stagger_dim(loc)
+    rng = np.random.RandomState(seed)
+    c = fields.scatter(grid, rng.rand(*grid.global_shape).astype(np.float32))
+    # masks are local-view functions (they read the rank coordinate)
+    mask = np.asarray(jax.jit(jax.shard_map(
+        lambda: fields.valid_mask(grid, loc, jnp.float32),
+        mesh=grid.mesh, in_specs=(), out_specs=grid.spec,
+        check_vma=False))())
+    for raw in (ops.diff_to_face(c.data, d), ops.avg_to_face(c.data, d)):
+        out = np.asarray(raw)
+        np.testing.assert_array_equal(out * mask, out)
+    F = ops.to_face(c, d)
+    assert F.loc == loc
+    np.testing.assert_array_equal(np.asarray(F.data) * mask, np.asarray(F.data))
+    # scatter/gather round-trip of the valid (dead-plane-free) array
+    G = rng.rand(*fields.valid_global_shape(grid, loc)).astype(np.float32)
+    np.testing.assert_array_equal(fields.gather(fields.scatter(grid, G, loc)), G)
+
+
 @settings(max_examples=8, deadline=None)
 @given(
     n=st.integers(6, 20),
