@@ -31,6 +31,9 @@ def main():
                     choices=["explicit", "cg", "mgcg"])
     ap.add_argument("--overlap", action="store_true",
                     help="hide_apply overlap on the implicit operator")
+    ap.add_argument("--periodic", action="store_true",
+                    help="periodic x/y dims (works with every method: the "
+                         "implicit pressure operator stays nonsingular)")
     args = ap.parse_args()
 
     import jax
@@ -39,13 +42,16 @@ def main():
     from repro.apps.twophase import TwoPhase3D
 
     print(f"devices: {jax.device_count()}")
+    per = (True, True, False) if args.periodic else (False, False, False)
     if args.method == "explicit":
-        app = TwoPhase3D(nx=args.nx, ny=args.nx, nz=args.nx, hide=(8, 2, 2))
+        app = TwoPhase3D(nx=args.nx, ny=args.nx, nz=args.nx, hide=(8, 2, 2),
+                         periodic=per)
     else:
         # dt defaults to 10x the explicit stability limit — the point of
         # the implicit pressure projection
         app = TwoPhase3D(nx=args.nx, ny=args.nx, nz=args.nx,
-                         method=args.method, overlap=args.overlap, tol=1e-6)
+                         method=args.method, overlap=args.overlap, tol=1e-6,
+                         periodic=per)
     nt = args.nt if args.nt is not None else \
         (150 if args.method == "explicit" else 15)
     g = app.grid

@@ -1,12 +1,20 @@
 """3-D variable-coefficient Poisson, solved three ways.
 
-    -div( c(x) grad u ) = f,   u = 0 on the boundary ring
+    -div( c(x) grad u ) = f
 
 on the implicit global grid, with the three solvers of
 :mod:`repro.solvers` — CG, accelerated pseudo-transient, and geometric
 multigrid — all judged on the same deduplicated global relative residual,
 and validated against a single-array NumPy oracle (matrix-free CG on the
 gathered global grid).
+
+Boundary conditions per dim follow ``periodic``: ``u = 0`` on the
+boundary ring of non-periodic dims, wraparound on periodic dims (the
+coefficient and rhs are built wrap-consistent there).  With EVERY dim
+periodic the operator is singular — ``cg``/``mgcg`` run with
+``project_nullspace="constant"`` and ``mg`` projects internally, all
+returning the mean-zero representative; ``pt`` is rejected (its optimal
+damping needs ``lam_min > 0``).
 
 This is the template for every future implicit/steady-state app: build a
 grid, define the local-view operator, pick a solver.
@@ -32,6 +40,7 @@ class Poisson3D:
     nz: int = 10
     lx: float = 1.0         # domain edge length along x (y/z scale with N)
     coef_amp: float = 0.5   # c = 1 + amp * (smooth); keep < 1 for SPD
+    periodic: tuple = (False, False, False)
     dims: tuple | None = None
     mesh: object = None     # optional explicit device mesh (subset runs)
     dtype: object = jnp.float64
@@ -45,28 +54,53 @@ class Poisson3D:
             )
         self.grid = init_global_grid(self.nx, self.ny, self.nz,
                                      dims=self.dims, mesh=self.mesh,
+                                     periodic=self.periodic,
                                      dtype=self.dtype)
         g = self.grid
-        self.dx = self.lx / (g.nx_g() - 1)
+        self.singular = all(g.topo.periodic)  # shift-free + all-periodic
+
+        # Uniform spacing, set by the x extent (y/z edges scale with N,
+        # preserving the lx contract above); grid.span is periodic-aware
+        # (N-1 node intervals for Dirichlet, N-overlap cells per period).
+        self.dx = self.lx / g.span(0)
         self.spacing = (self.dx, self.dx, self.dx)
         N = g.global_shape
 
         amp = self.coef_amp
+        per = g.topo.periodic
+        h = g.halo
+
+        # Normalized coordinate per dim: periodic dims use x = (i-h)/P so
+        # any period-1 function of x is automatically wrap-consistent on
+        # the ring duplicates (i == i +- P); Dirichlet dims keep i/(N-1).
+        def coords(ix, iy, iz):
+            out = []
+            for d, i in enumerate((ix, iy, iz)):
+                if per[d]:
+                    out.append((i - h) / g.span(d))
+                else:
+                    out.append(i / (N[d] - 1))
+            return out
 
         def c_fn(ix, iy, iz):
-            x = ix / (N[0] - 1)
-            y = iy / (N[1] - 1)
-            z = iz / (N[2] - 1)
+            x, y, z = coords(ix, iy, iz)
             return 1.0 + amp * jnp.sin(2 * jnp.pi * x) \
                 * jnp.sin(2 * jnp.pi * y) * jnp.sin(2 * jnp.pi * z)
 
         def f_fn(ix, iy, iz):
-            x = ix / (N[0] - 1)
-            y = iy / (N[1] - 1)
-            z = iz / (N[2] - 1)
-            bump = jnp.exp(-((x - 0.5) ** 2 + (y - 0.5) ** 2
-                             + (z - 0.5) ** 2) / 0.02)
-            return bump * jnp.sin(jnp.pi * x)
+            x, y, z = coords(ix, iy, iz)
+            if not any(per):
+                bump = jnp.exp(-((x - 0.5) ** 2 + (y - 0.5) ** 2
+                                 + (z - 0.5) ** 2) / 0.02)
+                return bump * jnp.sin(jnp.pi * x)
+            # periodic dims need a wrap-consistent (period-1) rhs; the
+            # product of sines is also mean-zero, keeping the singular
+            # all-periodic system consistent.
+            parts = [
+                jnp.sin(2 * jnp.pi * v) if per[d] else jnp.sin(jnp.pi * v)
+                for d, v in enumerate((x, y, z))
+            ]
+            return parts[0] * parts[1] * parts[2]
 
         self.c = g.from_global_fn(c_fn)
         self.b = g.from_global_fn(f_fn)
@@ -86,8 +120,10 @@ class Poisson3D:
     def spectral_bounds(self) -> tuple[float, float]:
         """(lam_min, lam_max) estimates for the pseudo-transient solver.
 
-        Gershgorin upper bound; lowest-Fourier-mode lower bound (exact for
-        constant coefficients, a safe underestimate for smooth ones).
+        Gershgorin upper bound; lowest-Fourier-mode lower bound (exact
+        for constant coefficients, a safe underestimate for smooth ones).
+        Periodic dims admit modes constant along them, so only Dirichlet
+        dims contribute to ``lam_min`` — all-periodic gives 0 (singular).
         """
         g = self.grid
         c_min = float(solvers.field_min_g(g, self.c))
@@ -95,7 +131,8 @@ class Poisson3D:
         lam_max = c_max * sum(4.0 / h ** 2 for h in self.spacing)
         lam_min = c_min * sum(
             (np.pi / ((n - 1) * h)) ** 2
-            for n, h in zip(g.global_shape, self.spacing)
+            for d, (n, h) in enumerate(zip(g.global_shape, self.spacing))
+            if not g.topo.periodic[d]
         )
         return lam_min, lam_max
 
@@ -110,10 +147,12 @@ class Poisson3D:
         communication-hiding application.  Returns ``(u, info)``.
         """
         apply_A = self.apply_A_overlap if overlap else self.apply_A
+        project = "constant" if self.singular else None
         if method == "cg":
             return solvers.cg(
                 self.grid, apply_A, self.b, tol=tol,
-                maxiter=maxiter or 2000, args=(self.c,), **kw)
+                maxiter=maxiter or 2000, args=(self.c,),
+                project_nullspace=project, **kw)
         if method == "mgcg":
             if not hasattr(self, "_mg_precond"):
                 self._mg_precond = solvers.CyclePreconditioner(
@@ -121,8 +160,15 @@ class Poisson3D:
             return solvers.cg(
                 self.grid, apply_A, self.b, tol=tol,
                 maxiter=maxiter or 2000, args=(self.c,),
-                apply_M=self._mg_precond, **kw)
+                apply_M=self._mg_precond,
+                project_nullspace=project, **kw)
         if method == "pt":
+            if self.singular:
+                raise ValueError(
+                    "method='pt' needs lam_min > 0, but the all-periodic "
+                    "Poisson operator is singular — use 'cg'/'mgcg' "
+                    "(nullspace-projected) or 'mg', or pin one dim "
+                    "non-periodic")
             lam_min, lam_max = self.spectral_bounds()
             return solvers.pseudo_transient(
                 self.grid, apply_A, self.b, tol=tol,
@@ -141,11 +187,15 @@ class Poisson3D:
     def residual_norm(self, u) -> float:
         """Relative residual over the unknowns — same mask and zero-rhs
         guard as the solvers' convergence test, so it matches
-        ``SolveInfo.relres``."""
+        ``SolveInfo.relres`` (for the singular all-periodic system both
+        are judged against the mean-zero projection of the rhs)."""
         g = self.grid
 
         def _rel(b, u, c):
             mask = solvers.solve_mask(g, b.dtype)
+            if self.singular:
+                b = b - solvers.reductions.masked_mean(
+                    g, b, mask).astype(b.dtype)
             r = b - self.apply_A(u, c)
             return solvers.norm_l2(g, r, mask) \
                 / solvers.reductions.rhs_norm(g, b, mask)
@@ -157,12 +207,43 @@ class Poisson3D:
     # NumPy oracle (single global array, matrix-free CG)
     # ------------------------------------------------------------------
     def oracle(self, tol: float = 1e-10, maxiter: int = 20000) -> np.ndarray:
+        """Matrix-free NumPy CG on the gathered global arrays.
+
+        Mirrors the distributed algorithm exactly: the ring planes of
+        periodic dims are ghost cells refreshed by a wrap copy before
+        each operator application (the single-array analogue of the
+        wraparound halo exchange), and the singular all-periodic system
+        is projected onto mean-zero (rhs and returned solution).
+        """
         g = self.grid
+        per = g.topo.periodic
         c = g.gather(self.c).astype(np.float64)
         b = g.gather(self.b).astype(np.float64)
         h2 = np.asarray(self.spacing, np.float64) ** 2
+        inner = (slice(1, -1),) * 3
+
+        def wrap(u):
+            # periodic ghost update (h = 1): ring == opposite interior
+            for d in range(3):
+                if not per[d]:
+                    continue
+                lo = [slice(None)] * 3
+                hi = [slice(None)] * 3
+                lo[d], hi[d] = 0, -2
+                u[tuple(lo)] = u[tuple(hi)]
+                lo[d], hi[d] = -1, 1
+                u[tuple(lo)] = u[tuple(hi)]
+            return u
+
+        wrap(c)
+
+        def demean(u):
+            if self.singular:
+                u[inner] -= u[inner].mean()
+            return u
 
         def apply_A(u):
+            u = wrap(u.copy())
             out = np.zeros_like(u)
             u0 = u[1:-1, 1:-1, 1:-1]
             c0 = c[1:-1, 1:-1, 1:-1]
@@ -179,7 +260,7 @@ class Poisson3D:
             out[1:-1, 1:-1, 1:-1] = -acc
             return out
 
-        inner = (slice(1, -1),) * 3
+        b = demean(b.copy())
         x = np.zeros_like(b)
         r = np.zeros_like(b)
         r[inner] = b[inner]
@@ -196,4 +277,4 @@ class Poisson3D:
             rs_new = float((r[inner] ** 2).sum())
             p = r + (rs_new / rs) * p
             rs = rs_new
-        return x
+        return wrap(demean(x))

@@ -35,6 +35,13 @@ Two time integrators (``method=``):
 The porosity is advanced with the new pressure (semi-implicit coupling);
 nonlinear coefficients are frozen at the old porosity, exactly like the
 production solver's Picard linearization.
+
+Any mix of periodic/Dirichlet dims works with EVERY integrator: the
+halo exchange wraps ring duplicates, the wrap-aware masks of
+:mod:`repro.solvers.reductions` count them once, and the implicit
+pressure operator's ``1/dt + 1/eta`` diagonal keeps it nonsingular even
+on an all-periodic domain (no nullspace projection needed, unlike the
+pure-Poisson case).
 """
 
 from __future__ import annotations
@@ -78,17 +85,30 @@ class TwoPhase3D:
     def __post_init__(self):
         if self.method not in METHODS:
             raise ValueError(f"unknown method {self.method!r}; pick from {METHODS}")
-        if self.method != "explicit" and any(self.periodic):
+        if len(self.periodic) != 3:
             raise ValueError(
-                "implicit methods treat the boundary ring as Dirichlet data; "
-                "periodic dims are only supported with method='explicit'")
+                f"periodic must be a 3-tuple of bools, got {self.periodic!r}")
+        # Periodic dims are supported by every integrator: the solve
+        # stack's wrap-aware masks count ring duplicates once, and the
+        # implicit pressure operator carries the 1/dt + 1/eta diagonal,
+        # so it stays nonsingular even all-periodic (no nullspace
+        # projection needed, unlike the pure-Poisson case).
         self.grid = init_global_grid(self.nx, self.ny, self.nz,
                                      dims=self.dims, mesh=self.mesh,
                                      periodic=self.periodic, dtype=self.dtype)
         g = self.grid
-        self.dx = self.lx / (g.nx_g() - 1)
-        self.dy = self.lx / (g.ny_g() - 1)
-        self.dz = self.lx / (g.nz_g() - 1)
+        if self.method == "mgcg" and not g.can_coarsen():
+            raise ValueError(
+                f"method='mgcg' needs a coarsenable grid, but local shape "
+                f"{g.local_shape} admits no second multigrid level — "
+                "enlarge the local extents (even interiors >= 4) or use "
+                "method='cg'")
+
+        # grid.span is periodic-aware: N-1 node intervals bracket a
+        # Dirichlet dim, a periodic dim has N - overlap cells per period.
+        self.dx = self.lx / g.span(0)
+        self.dy = self.lx / g.span(1)
+        self.dz = self.lx / g.span(2)
         self.spacing = (self.dx, self.dy, self.dz)
         # explicit pseudo-transient stability: dt < dx^2 / (6 k_max) with
         # k_max = (phi_max/phi0)^npow = 4^npow for the 3x-amplitude seed

@@ -100,6 +100,15 @@ class ImplicitGlobalGrid:
         """True global grid shape (deduplicated)."""
         return tuple(self.n_g(d) for d in range(self.ndims))
 
+    def span(self, dim: int) -> int:
+        """Domain span of ``dim`` in cells: ``N - 1`` node intervals
+        bracket a Dirichlet dim; a periodic dim covers its ``N - overlap``
+        unique cells per period (the ring planes are wrap duplicates,
+        ``i == i +- (N - overlap)``).  The single source of truth for
+        spacing denominators and (all-periodic) unknown counts."""
+        n = self.n_g(dim)
+        return n - self.overlap if self.topo.periodic[dim] else n - 1
+
     @property
     def stacked_shape(self) -> tuple[int, ...]:
         """Shape of the stacked-blocks array (the storage layout)."""

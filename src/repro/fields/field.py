@@ -272,12 +272,15 @@ def owned_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
 
 
 def interior_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
-    """1.0 on the Dirichlet unknowns of a field at ``loc``.
+    """1.0 on the unknowns of a field at ``loc``.
 
-    Along a non-staggered dim the boundary ring is the usual global
-    ``[0, w)`` / ``[N - w, N)``; along the staggered dim the boundary
-    *faces* are ``[0, w)`` and ``[N - 1 - w, N - 1)`` (the dead plane
-    ``N - 1`` is excluded too).  ``w`` is the grid halo width.
+    Along a non-staggered Dirichlet dim the boundary ring is the usual
+    global ``[0, w)`` / ``[N - w, N)``; along a staggered Dirichlet dim
+    the boundary *faces* are ``[0, w)`` and ``[N - 1 - w, N - 1)`` (the
+    dead plane ``N - 1`` is excluded too).  ``w`` is the grid halo
+    width.  Periodic dims have no pinned planes — the ring (and, on the
+    staggered dim, the formerly dead plane) is a live wrap duplicate
+    maintained by the halo exchange — so they are left unmasked.
     """
     dtype = dtype or grid.dtype
     w = grid.halo
@@ -285,6 +288,8 @@ def interior_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
     gidx = grid.local_global_indices()
     sd = stagger_dim(loc)
     for d in range(grid.ndims):
+        if grid.topo.periodic[d]:
+            continue
         hi = grid.n_g(d) - w - (1 if d == sd else 0)
         m = m * ((gidx[d] >= w) & (gidx[d] < hi)).astype(dtype)
     return m

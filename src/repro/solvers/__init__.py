@@ -6,11 +6,14 @@ stencil step plus deduplicated global reductions for convergence.  This
 package provides that as a platform:
 
 * :mod:`reductions` — exact global dot/norms inside the shard_map local
-  view (halo-overlap cells masked out), via ``psum``/``pmax``; including
-  single-all-reduce dots over whole pytrees (staggered FieldSets).
+  view (halo-overlap cells masked out; on periodic dims the wrap-aware
+  masks count ring-duplicated planes once), via ``psum``/``pmax``;
+  including single-all-reduce dots over whole pytrees (staggered
+  FieldSets), accumulated in f64.
 * :func:`cg` — matrix-free (preconditioned) conjugate gradient over an
   array OR a staggered-system pytree; the whole Krylov loop is one
-  compiled ``lax.while_loop``.
+  compiled ``lax.while_loop``; ``project_nullspace="constant"`` keeps
+  singular all-periodic operators on the mean-zero complement.
 * :func:`pseudo_transient` — the accelerated pseudo-transient method
   (damped second-order dynamics) with device-side residual history.
 * :func:`multigrid_solve` — geometric V-cycles on the
@@ -22,9 +25,9 @@ package provides that as a platform:
 """
 
 from .reductions import (
-    dot, norm_l2, norm_linf, owned_mask, interior_mask, solve_mask,
+    acc_dtype, dot, norm_l2, norm_linf, owned_mask, interior_mask, solve_mask,
     dot_g, norm_l2_g, norm_linf_g, field_min, field_max,
-    field_min_g, field_max_g, tree_dot, tree_rhs_norm,
+    field_min_g, field_max_g, tree_dot, tree_rhs_norm, masked_mean,
 )
 from .cg import cg, SolveInfo
 from .pseudo_transient import pseudo_transient, PTInfo, optimal_parameters
@@ -36,9 +39,10 @@ from .multigrid import (
 from .preconditioner import CyclePreconditioner
 
 __all__ = [
-    "dot", "norm_l2", "norm_linf", "owned_mask", "interior_mask", "solve_mask",
+    "acc_dtype", "dot", "norm_l2", "norm_linf", "owned_mask", "interior_mask", "solve_mask",
     "dot_g", "norm_l2_g", "norm_linf_g", "field_min", "field_max",
     "field_min_g", "field_max_g", "tree_dot", "tree_rhs_norm",
+    "masked_mean",
     "cg", "SolveInfo",
     "pseudo_transient", "PTInfo", "optimal_parameters",
     "multigrid_solve", "poisson_apply", "poisson_diag",

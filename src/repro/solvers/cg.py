@@ -92,6 +92,7 @@ def cg(
     tol: float = 1e-6,
     maxiter: int = 1000,
     apply_M: Callable | None = None,
+    project_nullspace: str | None = None,
     args=(),
 ):
     """Solve ``A x = b`` with (preconditioned) conjugate gradient.
@@ -99,9 +100,13 @@ def cg(
     ``apply_A(u, *args_local)`` is a local-view function over the pytree
     ``u``; it must zero the physical boundary ring (per-location boundary
     faces for staggered leaves) so Dirichlet boundary cells stay fixed.
-    ``args`` are extra grid fields (e.g. a coefficient field) passed to
-    the operator in their local view.  ``b`` / ``x0`` are host-level grid
-    fields or pytrees thereof (``FieldSet`` for staggered systems).
+    On periodic dims the ring is a wrap duplicate instead — the
+    operator's internal halo exchange maintains it and the wrap-aware
+    masks of :mod:`repro.solvers.reductions` count each physical cell
+    once.  ``args`` are extra grid fields (e.g. a coefficient field)
+    passed to the operator in their local view.  ``b`` / ``x0`` are
+    host-level grid fields or pytrees thereof (``FieldSet`` for staggered
+    systems).
 
     ``apply_M`` is an optional SPD preconditioner, applied as ``z = M r``.
     It is either a plain local-view function of the residual pytree, or an
@@ -110,8 +115,21 @@ def cg(
     setup runs ONCE before the Krylov loop — per-level coefficient
     hierarchies and the like are hoisted out of the iteration.
 
+    ``project_nullspace="constant"`` removes the constant mode from the
+    right-hand side, the preconditioned residual, and the returned
+    iterate (masked mean over the unknowns via the wrap-aware
+    reductions; per leaf, since each component of a pytree system
+    carries its own constant mode).  Required for
+    singular-but-consistent systems — the all-periodic Poisson /
+    shift-free Helmholtz operator annihilates constants, so CG must be
+    kept on the mean-zero complement.
+
     Returns ``(x, SolveInfo)``.
     """
+    if project_nullspace not in (None, "constant"):
+        raise ValueError(
+            f"unknown project_nullspace {project_nullspace!r}; "
+            "expected None or 'constant'")
     if x0 is None:
         x0 = _tmap(jnp.zeros_like, b)
 
@@ -124,12 +142,30 @@ def cg(
         def masked(t):
             return _tmap(lambda a, m: a * m, t, unk_masks)
 
+        if project_nullspace == "constant":
+            def project(t):
+                # The constant nullspace is PER COMPONENT (each leaf of a
+                # staggered system carries its own constant mode), so
+                # subtract each leaf's own masked mean — on the unknowns
+                # only (a Dirichlet ring, if any dim has one, keeps its
+                # BC data).
+                def one(a, mr, mu):
+                    mean = red.masked_mean(grid, a, mr)
+                    return a - mean.astype(a.dtype) * mu
+
+                return _tmap(one, t, red_masks, unk_masks)
+
+            b = project(b)
+        else:
+            def project(t):
+                return t
+
         bnorm = red.tree_rhs_norm(grid, b, red_masks)
 
         M = apply_M.setup(*ops) if hasattr(apply_M, "setup") else apply_M
 
         r = masked(_tmap(lambda bi, ai: bi - ai, b, apply_A(x, *ops)))
-        z = masked(M(r)) if M is not None else r
+        z = project(masked(M(r))) if M is not None else project(r)
         p = z
         rz = mdot(r, z)
         res = jnp.sqrt(mdot(r, r))
@@ -142,11 +178,12 @@ def cg(
             x, r, p, rz, _, k = carry
             Ap = masked(apply_A(p, *ops))
             alpha = rz / mdot(p, Ap)
-            x = _tmap(lambda xi, pi: xi + alpha * pi, x, p)
-            r = _tmap(lambda ri, ai: ri - alpha * ai, r, Ap)
-            z = masked(M(r)) if M is not None else r
+            x = _tmap(lambda xi, pi: xi + alpha.astype(xi.dtype) * pi, x, p)
+            r = _tmap(lambda ri, ai: ri - alpha.astype(ri.dtype) * ai, r, Ap)
+            z = project(masked(M(r))) if M is not None else project(r)
             rz_new = mdot(r, z)
-            p = _tmap(lambda zi, pi: zi + (rz_new / rz) * pi, z, p)
+            beta = rz_new / rz
+            p = _tmap(lambda zi, pi: zi + beta.astype(zi.dtype) * pi, z, p)
             # unpreconditioned: rz_new IS <r, r>; skip the third all-reduce
             res = jnp.sqrt(mdot(r, r)) if M is not None \
                 else jnp.sqrt(rz_new)
@@ -155,15 +192,17 @@ def cg(
         x, _, _, _, res, k = jax.lax.while_loop(
             cond, body, (x, r, p, rz, res, jnp.zeros((), jnp.int32))
         )
-        # Seam halo cells of x were never written by the masked updates;
-        # refresh them so gather() sees the solution everywhere.
+        # Return the mean-zero representative of a singular solve, and
+        # refresh the seam halo cells of x (never written by the masked
+        # updates) so gather() sees the solution everywhere.
+        x = project(x)
         x = _tmap(lambda a: grid.update_halo(a), x)
         return x, k, res / bnorm
 
     # One compiled program per (operator, tolerances, structure/shapes):
     # reuse the grid's executable cache so repeat solves skip retracing
     # (and finalize() releases them).
-    key = ("solvers.cg", apply_A, apply_M, tol, maxiter,
+    key = ("solvers.cg", apply_A, apply_M, tol, maxiter, project_nullspace,
            _sig(b), tuple(_sig(a) for a in args))
     if key not in grid._jit_cache:
         sm = jax.shard_map(

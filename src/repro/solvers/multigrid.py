@@ -223,15 +223,17 @@ def coarsen_coefficient(c):
 def level_spacings(grid: ImplicitGlobalGrid, grids, spacing):
     """Per-level grid spacings from each level's true global node count.
 
-    NOT a naive ``2**level`` — the ring nodes don't coarsen, so the exact
-    factor is ``(N_fine-1)/(N_coarse-1)`` per dim; getting this wrong
-    mis-scales deep coarse operators by up to ~50% in ``1/h^2`` and
-    stalls the cycle.
+    NOT a naive ``2**level`` — on Dirichlet dims the ring nodes don't
+    coarsen, so the exact factor is ``(N_fine-1)/(N_coarse-1)`` per dim;
+    getting this wrong mis-scales deep coarse operators by up to ~50% in
+    ``1/h^2`` and stalls the cycle.  On periodic dims the unique cell
+    count is ``N - overlap`` (the ring is a wrap duplicate), which halves
+    exactly per level, so the factor is exactly 2 there.
     """
     spacing = tuple(float(s) for s in spacing)
-    lengths = [(n - 1) * h for n, h in zip(grid.global_shape, spacing)]
+    lengths = [grid.span(d) * h for d, h in enumerate(spacing)]
     return [
-        tuple(L / (n - 1) for L, n in zip(lengths, g.global_shape))
+        tuple(L / g.span(d) for d, L in enumerate(lengths))
         for g in grids
     ]
 
@@ -294,6 +296,16 @@ def make_v_cycle(
     ``smoother`` selects damped Jacobi or the 3-term Chebyshev smoother
     for the pre/post sweeps (``nu_pre``/``nu_post`` = sweeps resp.
     polynomial degree); the coarsest level always uses Jacobi sweeps.
+
+    Periodic dims need no special casing in the cycle itself: every
+    level shares the topology (coarse grids inherit ``topo.periodic``),
+    so each ``update_halo`` wraps the ring planes and the transfers read
+    wrap-consistent halos — the cell-centered identification
+    ``i == i +- (N - overlap)`` is preserved exactly under 2:1
+    coarsening.  The one genuine difference is the ALL-periodic
+    shift-free case, where the operator is singular: the coarse-level
+    rhs is projected onto mean-zero before the coarse sweeps (see
+    ``_demean``) so the Jacobi solve cannot pump the constant mode.
     """
     if smoother not in SMOOTHERS:
         raise ValueError(f"unknown smoother {smoother!r}; pick from {SMOOTHERS}")
@@ -301,6 +313,16 @@ def make_v_cycle(
     dias = [poisson_diag(ck, hk) for ck, hk in zip(cs, hs)]
     if shifts is not None:
         dias = [dk + sk[_inner(nd)] for dk, sk in zip(dias, shifts)]
+    # All-periodic + shift-free: every level's operator annihilates
+    # constants.  The coarse rhs is kept mean-zero (wrap-aware masked
+    # mean) so the coarse Jacobi sweeps cannot pump the nullspace mode —
+    # without this the correction grows linearly with coarse_sweeps.
+    singular = shifts is None and all(grid.topo.periodic)
+
+    def _demean(level, f):
+        m = red.solve_mask(grids[level], f.dtype)
+        mean = red.masked_mean(grids[level], f, m)
+        return f - mean.astype(f.dtype)
 
     def residual(level, u, f):
         """f - A u on the interior, zero ring (u halo-consistent)."""
@@ -335,6 +357,8 @@ def make_v_cycle(
 
     def v_cycle(level, u, f):
         if level == len(grids) - 1:
+            if singular:
+                f = _demean(level, f)
             return jacobi(level, u, f, coarse_sweeps)
         u = smooth(level, u, f, nu_pre)
         r = grid.update_halo(residual(level, u, f))
@@ -371,14 +395,19 @@ def multigrid_solve(
     max_levels: int | None = None,
     smoother: str = "jacobi",
 ):
-    """Solve ``-div(c grad x) = b`` (homogeneous Dirichlet) by V-cycles.
+    """Solve ``-div(c grad x) = b`` by V-cycles.
 
-    ``c``/``b`` are host-level grid fields; convergence is the
-    deduplicated global relative residual on the FINE level, so the
-    solution matches a single-device solve regardless of how crude the
-    coarse-level operators are.  ``smoother`` picks damped Jacobi or the
-    3-term Chebyshev smoother for the pre/post sweeps.  Returns
-    ``(x, SolveInfo)``.
+    Boundary conditions per dim follow ``grid.topo.periodic``:
+    homogeneous Dirichlet on non-periodic dims (the ring holds the BC),
+    wraparound on periodic dims (the halo exchange maintains the ring
+    duplicates).  With EVERY dim periodic the operator is singular; the
+    rhs is projected onto mean-zero and the mean-zero representative of
+    the solution is returned.  ``c``/``b`` are host-level grid fields;
+    convergence is the deduplicated global relative residual on the FINE
+    level, so the solution matches a single-device solve regardless of
+    how crude the coarse-level operators are.  ``smoother`` picks damped
+    Jacobi or the 3-term Chebyshev smoother for the pre/post sweeps.
+    Returns ``(x, SolveInfo)``.
     """
     if grid.halo != 1:
         raise ValueError("multigrid assumes halo width 1 (overlap=2)")
@@ -394,6 +423,8 @@ def multigrid_solve(
     spacing = tuple(float(s) for s in spacing)
     hs = level_spacings(grid, grids, spacing)
 
+    singular = all(grid.topo.periodic)
+
     def _local(b, c, x):
         cs = build_coefficients(grid, grids, c)
         v_cycle, residual = make_v_cycle(
@@ -402,6 +433,13 @@ def multigrid_solve(
         )
         mask = red.solve_mask(grid, b.dtype)
 
+        def demean(a):
+            # operator is singular: keep rhs and iterate on the
+            # mean-zero complement (wrap-aware masked mean)
+            return a - red.masked_mean(grid, a, mask).astype(a.dtype)
+
+        if singular:
+            b = demean(b)
         bnorm = red.rhs_norm(grid, b, mask)
         x = grid.update_halo(x)
         r0 = residual(0, x, b)
@@ -421,6 +459,8 @@ def multigrid_solve(
         x, res, k = jax.lax.while_loop(
             cond, body, (x, res0, jnp.zeros((), jnp.int32))
         )
+        if singular:
+            x = grid.update_halo(demean(x))
         return x, k, res / bnorm
 
     key = ("solvers.mg", tol, maxiter, nu_pre, nu_post, omega,

@@ -54,6 +54,13 @@ class CyclePreconditioner:
     the Krylov operator carries a dominant shift (an implicit time step's
     ``1/dt + 1/eta``): preconditioning such an operator with the pure
     Poisson cycle is *worse* than no preconditioner at all.
+
+    Periodic dims are inherited from the grid topology at every level
+    (see :func:`repro.solvers.multigrid.make_v_cycle`).  For the
+    singular all-periodic shift-free operator the cycle mean-projects
+    its coarse solve internally; pair it with
+    ``cg(..., project_nullspace="constant")`` so the Krylov iterates
+    stay on the mean-zero complement too.
     """
 
     def __init__(

@@ -102,7 +102,8 @@ def pseudo_transient(
             x = x + v
             r = (b - apply_A(x, *ops)) * mi
             res = jnp.sqrt(red.dot(grid, r, r, mask))
-            hist = jax.lax.dynamic_update_index_in_dim(hist, res, k, 0)
+            hist = jax.lax.dynamic_update_index_in_dim(
+                hist, res.astype(hist.dtype), k, 0)
             return x, v, r, res, k + 1, hist
 
         x, _, _, res, k, hist = jax.lax.while_loop(

@@ -8,6 +8,20 @@ boundary ring on first/last blocks — so deduplicated global dot products
 and norms are exact: the distributed analogue of the convergence-check
 ``MPI.Allreduce`` in the paper's flagship iterative apps.
 
+Periodic dims (``grid.topo.periodic[d]``) change the bookkeeping, not the
+mechanics: the global ring planes ``[0, h)`` / ``[N-h, N)`` are *wrap
+duplicates* of the opposite interior (identification ``i == i +- (N -
+overlap)``, maintained by the wraparound halo exchange), not Dirichlet
+data.  So on a periodic dim ownership excludes the ring (each physical
+cell counted exactly once — ring + interior would double-count the
+duplicated planes) and :func:`interior_mask` skips the Dirichlet pinning
+(every unique cell is an unknown).  Dirichlet dims keep the original
+behavior bit-for-bit.
+
+Masked dot products and norms accumulate in float64 regardless of the
+field dtype (when x64 is enabled), so f32 solves get faithful stopping
+tests — the first step toward the mixed-precision CG roadmap item.
+
 All functions run INSIDE ``shard_map``; scalars they return are
 replicated across the mesh (safe to use in ``lax.while_loop`` predicates).
 """
@@ -41,16 +55,29 @@ def pmin(topo: CartesianTopology, x):
     return jax.lax.pmin(x, axes) if axes else x
 
 
+def acc_dtype(dtype):
+    """Accumulator dtype for masked reductions: float64 for floating
+    fields (faithful stopping tests for f32 solves), identity otherwise.
+    Falls back to the field dtype when jax x64 is disabled (the upcast
+    would silently canonicalize back to f32 anyway)."""
+    if jax.config.jax_enable_x64 and jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return jnp.float64
+    return dtype
+
+
 def owned_mask(grid: ImplicitGlobalGrid, dtype=None):
     """1.0 on cells this block owns in the deduplicated global grid.
 
     The block interiors ``[h, n-h)`` tile the global grid exactly (the
     ``overlap = 2h`` shared cells are each interior to exactly one block),
     so ownership is: the non-halo cells, plus the physical boundary ring
-    on first/last blocks.  Every owned cell is *locally computed* — the
-    mask is exact even for fields whose halo cells are stale or zeroed
-    (e.g. a fresh operator application), with no halo exchange required
-    before reducing.
+    on first/last blocks.  On a *periodic* dim the ring planes are wrap
+    duplicates of the opposite interior (``i == i +- (N - overlap)``),
+    already owned there — ring ownership is dropped so each physical cell
+    is counted exactly once.  Every owned cell is *locally computed* —
+    the mask is exact even for fields whose halo cells are stale or
+    zeroed (e.g. a fresh operator application), with no halo exchange
+    required before reducing.
     """
     dtype = dtype or grid.dtype
     m = jnp.ones(grid.local_shape, dtype)
@@ -60,36 +87,56 @@ def owned_mask(grid: ImplicitGlobalGrid, dtype=None):
         idx = jnp.arange(n).reshape(
             tuple(n if i == d else 1 for i in range(grid.ndims))
         )
-        own = (
-            ((idx >= h) & (idx < n - h))
-            | ((grid.topo.coord(d) == 0) & (idx < h))
-            | ((grid.topo.coord(d) == grid.dims[d] - 1) & (idx >= n - h))
-        )
+        own = (idx >= h) & (idx < n - h)
+        if not grid.topo.periodic[d]:
+            own = (
+                own
+                | ((grid.topo.coord(d) == 0) & (idx < h))
+                | ((grid.topo.coord(d) == grid.dims[d] - 1) & (idx >= n - h))
+            )
         m = m * own.astype(dtype)
     return m
 
 
 def interior_mask(grid: ImplicitGlobalGrid, width: int | None = None, dtype=None):
-    """1.0 on cells strictly inside the *global* physical boundary ring.
+    """1.0 on the unknowns: cells not pinned by a Dirichlet boundary.
 
-    ``width`` defaults to the halo width — the ring that holds boundary
-    conditions for non-periodic problems.  Use ``owned_mask * interior_mask``
-    to reduce over the unknowns of a Dirichlet problem exactly once.
+    On non-periodic dims that is the cells strictly inside the global
+    physical boundary ring (``width`` defaults to the halo width — the
+    ring that holds boundary conditions).  Periodic dims have no pinned
+    planes — the ring is a live wrap duplicate maintained by the halo
+    exchange — so they are left unmasked.  Use ``owned_mask *
+    interior_mask`` to reduce over the unknowns exactly once.
     """
     dtype = dtype or grid.dtype
     w = grid.halo if width is None else int(width)
     m = jnp.ones(grid.local_shape, dtype)
     gidx = grid.local_global_indices()
     for d in range(grid.ndims):
+        if grid.topo.periodic[d]:
+            continue
         inner = (gidx[d] >= w) & (gidx[d] < grid.n_g(d) - w)
         m = m * inner.astype(dtype)
     return m
 
 
 def solve_mask(grid: ImplicitGlobalGrid, dtype=None):
-    """Reduction mask for Dirichlet solves: owned cells strictly inside
-    the physical boundary ring (the unknowns, each counted once)."""
+    """Reduction mask over the unknowns, each counted exactly once:
+    owned cells minus Dirichlet-pinned planes (non-periodic dims) and
+    ring-duplicated planes (periodic dims)."""
     return owned_mask(grid, dtype) * interior_mask(grid, dtype=dtype)
+
+
+def masked_mean(grid: ImplicitGlobalGrid, a, mask):
+    """Mean of ``a`` over the cells selected by ``mask``, in ONE
+    all-reduce (numerator and denominator psum'd together), accumulated
+    per :func:`acc_dtype`.  The wrap-aware mean used by every
+    constant-nullspace projection (singular all-periodic solves)."""
+    acc = acc_dtype(a.dtype)
+    num = (a.astype(acc) * mask.astype(acc)).sum()
+    den = mask.astype(acc).sum()
+    s = psum(grid.topo, jnp.stack([num, den]))
+    return s[0] / s[1]
 
 
 def rhs_norm(grid: ImplicitGlobalGrid, b, mask):
@@ -99,10 +146,16 @@ def rhs_norm(grid: ImplicitGlobalGrid, b, mask):
 
 
 def dot(grid: ImplicitGlobalGrid, a, b, mask=None):
-    """Deduplicated global dot product <a, b> (local view)."""
+    """Deduplicated global dot product <a, b> (local view).
+
+    Accumulates in float64 (see :func:`acc_dtype`) so the returned scalar
+    is a faithful stopping-test input even for f32 fields.
+    """
     if mask is None:
         mask = owned_mask(grid, a.dtype)
-    return psum(grid.topo, jnp.sum(a * b * mask))
+    acc = acc_dtype(a.dtype)
+    return psum(grid.topo, jnp.sum(
+        a.astype(acc) * b.astype(acc) * mask.astype(acc)))
 
 
 def tree_dot(grid: ImplicitGlobalGrid, a, b, masks):
@@ -121,7 +174,10 @@ def tree_dot(grid: ImplicitGlobalGrid, a, b, masks):
             "tree_dot: mismatched pytrees — "
             f"{len(la)}/{len(lb)}/{len(lm)} leaves for a/b/masks "
             "(a silently truncated zip would drop components)")
-    total = sum((x * y * m).sum() for x, y, m in zip(la, lb, lm))
+    total = sum(
+        (x.astype(acc_dtype(x.dtype)) * y.astype(acc_dtype(x.dtype))
+         * m.astype(acc_dtype(x.dtype))).sum()
+        for x, y, m in zip(la, lb, lm))
     return psum(grid.topo, total)
 
 

@@ -11,6 +11,8 @@ Recorded baselines (f64, 8 fake CPU ranks, dims=(2,2,2)):
 * Stokes velocity block 14^3 (nx=8):      cg 55, mgcg 12
 * Two-phase implicit pressure @ 10x dt_limit (30x22x22): cg 9/step,
   mgcg (Helmholtz-shifted cycle) 5/step
+* All-periodic Poisson 18^3 (nullspace-projected): cg 26, mgcg 10
+* Periodic (x/y) two-phase implicit pressure: mgcg 5/step
 """
 
 from _mp import run
@@ -29,6 +31,49 @@ print("poisson cg", cg.iterations, "mgcg", mgcg.iterations)
 assert cg.converged and mgcg.converged
 assert cg.iterations <= 75, cg.iterations        # recorded 54
 assert mgcg.iterations <= 17, mgcg.iterations    # recorded 12
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_periodic_poisson_cg_mgcg_iteration_ceilings():
+    """The singular all-periodic Poisson solved via the nullspace
+    projection must stay as cheap as recorded — a projection or
+    periodic-V-cycle regression shows up here as extra iterations."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.poisson import Poisson3D
+
+app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2),
+                periodic=(True, True, True))
+_, cg = app.solve("cg", tol=1e-8)
+_, mgcg = app.solve("mgcg", tol=1e-8)
+print("periodic poisson cg", cg.iterations, "mgcg", mgcg.iterations)
+assert cg.converged and mgcg.converged
+assert cg.iterations <= 36, cg.iterations        # recorded 26
+assert mgcg.iterations <= 14, mgcg.iterations    # recorded 10
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_periodic_twophase_pressure_iteration_ceiling():
+    """Periodic dims must not degrade the Helmholtz-shifted mgcg
+    pressure solve (recorded: same 5 iterations/step as Dirichlet)."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.twophase import TwoPhase3D
+
+_, infos = TwoPhase3D(nx=16, ny=12, nz=12, dims=(2, 2, 2), tol=1e-8,
+                      method="mgcg", periodic=(True, True, False)).run(5)
+it = max(i.iterations for i in infos)
+print("periodic twophase pressure mgcg/step", it)
+assert all(i.converged for i in infos)
+assert it <= 8, it                               # recorded 5
 print("OK")
 """,
         ndev=8,

@@ -1,0 +1,323 @@
+"""Periodic implicit solves: wrap-aware masks/reductions, the
+nullspace-projected CG, and the periodic-capable multigrid cycle.
+
+On a periodic dim the global ring planes are wrap duplicates of the
+opposite interior (``i == i +- (N - overlap)``), not Dirichlet data:
+ownership must count each physical cell once and nothing is pinned.
+Integer-valued payloads make the masked reductions exactly summable in
+f64, so the 1-rank vs 8-rank comparisons below are BIT-identical — any
+double-counted or dropped plane changes the integer sum."""
+
+import pytest
+
+from _mp import run
+
+
+def test_periodic_masked_reductions_exact_and_bitidentical():
+    """dot/norms on periodic grids count every unique cell exactly once
+    (== NumPy on the unique domain) and are bit-identical on 1 vs 8
+    ranks (integer payloads: the f64 sums are exact)."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid, make_grid_mesh
+from repro import solvers
+
+mesh1 = make_grid_mesh(3, dims=(1, 1, 1), devices=jax.devices()[:1])
+for per in [(True, True, True), (True, False, True), (False, True, False)]:
+    grid = init_global_grid(8, 6, 6, dims=(2, 2, 2), periodic=per,
+                            dtype=jnp.float64)
+    rng = np.random.RandomState(0)
+    GA = rng.randint(-50, 50, grid.global_shape).astype(np.float64)
+    GB = rng.randint(-50, 50, grid.global_shape).astype(np.float64)
+    A, B = grid.scatter(GA), grid.scatter(GB)
+    # unique physical cells: ring planes of periodic dims are duplicates
+    sl = tuple(slice(1, -1) if p else slice(None) for p in per)
+    assert float(solvers.dot_g(grid, A, B)) == (GA[sl] * GB[sl]).sum()
+    assert float(solvers.norm_linf_g(grid, A)) == np.abs(GA[sl]).max()
+    # bit-identical across layouts (exact integer sums either way)
+    n1 = [n + (d - 1) * (n - 2) for n, d in zip((8, 6, 6), (2, 2, 2))]
+    g1 = init_global_grid(*n1, mesh=mesh1, periodic=per, dtype=jnp.float64)
+    assert g1.global_shape == grid.global_shape
+    assert float(solvers.dot_g(g1, g1.scatter(GA), g1.scatter(GB))) \
+        == float(solvers.dot_g(grid, A, B))
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_periodic_mask_counts_per_location():
+    """solve_mask sums to the unknown count for every staggering
+    location on a mixed periodic/Dirichlet grid (periodic dims: N-2
+    unique cells/faces, nothing pinned; Dirichlet dims keep the ring
+    and, for the staggered dim, the dead plane out)."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from jax.sharding import PartitionSpec as P
+from repro.core import init_global_grid
+from repro import fields
+
+per = (True, False, True)
+grid = init_global_grid(8, 6, 6, dims=(2, 2, 2), periodic=per,
+                        dtype=jnp.float64)
+N = grid.global_shape
+
+def count(mask_fn, loc):
+    from repro.solvers import reductions as red
+    s = jax.jit(jax.shard_map(
+        lambda: red.psum(grid.topo,
+                         mask_fn(grid, loc, jnp.float64).sum()),
+        mesh=grid.mesh, in_specs=(), out_specs=P(), check_vma=False))()
+    return int(s)
+
+for loc in fields.LOCATIONS:
+    sd = fields.stagger_dim(loc)
+    want_solve = 1
+    want_owned = 1
+    for d in range(3):
+        if per[d]:
+            want_solve *= N[d] - 2          # unique cells == faces
+            want_owned *= N[d] - 2
+        else:
+            want_solve *= N[d] - 3 if d == sd else N[d] - 2
+            want_owned *= N[d] - 1 if d == sd else N[d]
+    assert count(fields.solve_mask, loc) == want_solve, loc
+    assert count(fields.owned_mask, loc) == want_owned, loc
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_allperiodic_poisson_cg_mgcg_match_oracle():
+    """All-periodic Poisson (singular operator): nullspace-projected cg
+    and mgcg match the NumPy oracle to rtol <= 1e-6, and the returned
+    representative is mean-zero over the unknowns."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.poisson import Poisson3D
+
+app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2),
+                periodic=(True, True, True))
+assert app.singular
+ref = app.oracle(tol=1e-12)
+inner = (slice(1, -1),) * 3
+for m in ("cg", "mgcg", "mg"):
+    u, info = app.solve(m, tol=1e-9)
+    assert info.converged, (m, info.iterations, info.relres)
+    got = app.grid.gather(u)
+    err = np.abs(got - ref).max() / np.abs(ref).max()
+    print(m, "iters", info.iterations, "err", err)
+    assert err < 1e-6, (m, err)
+    # singular solve returns the mean-zero representative
+    mean = got[inner].mean()
+    assert abs(mean) < 1e-12 * np.abs(got).max(), (m, mean)
+    assert app.residual_norm(u) < 2e-9, m
+# pt needs lam_min > 0: rejected with an actionable message
+try:
+    app.solve("pt")
+    raise SystemExit("expected ValueError for pt on a singular system")
+except ValueError as e:
+    assert "singular" in str(e)
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
+    )
+
+
+def test_mixed_periodic_poisson_all_solvers():
+    """Mixed periodic/Dirichlet dims: the operator is nonsingular (the
+    Dirichlet ring pins it) and all four solvers agree with the oracle
+    with no projection."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.poisson import Poisson3D
+
+app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2),
+                periodic=(True, False, True))
+assert not app.singular
+ref = app.oracle(tol=1e-12)
+for m in ("cg", "mgcg", "mg", "pt"):
+    u, info = app.solve(m, tol=1e-8)
+    assert info.converged, (m, info.iterations, info.relres)
+    err = np.abs(app.grid.gather(u) - ref).max() / np.abs(ref).max()
+    print(m, "iters", info.iterations, "err", err)
+    assert err < 1e-6, (m, err)
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
+    )
+
+
+def test_periodic_manufactured_solution_second_order():
+    """Constant-coefficient all-periodic Poisson with a manufactured
+    product-of-sines solution: the discrete solution converges at
+    second order (error ratio ~4 per 2x refinement), via the
+    nullspace-projected cg AND the mgcg path."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import solvers
+from repro.solvers.multigrid import poisson_apply
+
+def solve(nloc, method):
+    grid = init_global_grid(nloc, nloc, nloc, dims=(2, 2, 2),
+                            periodic=(True,) * 3, dtype=jnp.float64)
+    P = [grid.n_g(d) - grid.overlap for d in range(3)]
+    sp = tuple(1.0 / p for p in P)
+    kx, ky, kz = 1, 2, 1
+
+    def ustar(ix, iy, iz):
+        x, y, z = (ix - 1) / P[0], (iy - 1) / P[1], (iz - 1) / P[2]
+        return (jnp.sin(2 * jnp.pi * kx * x) * jnp.sin(2 * jnp.pi * ky * y)
+                * jnp.sin(2 * jnp.pi * kz * z))
+
+    lam = sum((2 * np.pi * k) ** 2 for k in (kx, ky, kz))
+    b = grid.from_global_fn(lambda ix, iy, iz: lam * ustar(ix, iy, iz))
+    c = grid.ones()
+
+    def apply_A(u, c):
+        return poisson_apply(grid, u, c, sp)
+
+    apply_M = solvers.CyclePreconditioner(grid, sp) \
+        if method == "mgcg" else None
+    u, info = solvers.cg(grid, apply_A, b, tol=1e-10, maxiter=4000,
+                         apply_M=apply_M, project_nullspace="constant",
+                         args=(c,))
+    assert info.converged, (method, nloc, info.relres)
+    inner = (slice(1, -1),) * 3
+    got = grid.gather(u)[inner]
+    ref = np.asarray(grid.gather(grid.from_global_fn(ustar)))[inner]
+    ref = ref - ref.mean()
+    return np.abs(got - ref).max()
+
+e_coarse = solve(10, "cg")    # 16^3 unique cells
+e_fine = solve(18, "cg")      # 32^3
+ratio = e_coarse / e_fine
+print("cg errs", e_coarse, e_fine, "ratio", ratio)
+assert 3.0 < ratio < 5.0, ratio
+e_mg = solve(18, "mgcg")
+print("mgcg err", e_mg)
+assert abs(e_mg - e_fine) < 1e-6 * max(e_fine, 1e-30), (e_mg, e_fine)
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
+    )
+
+
+def test_periodic_poisson_single_vs_multi_rank():
+    """All-periodic mgcg solve: the same global problem on 1 rank and on
+    8 ranks yields the same field (the wrap-aware masks and the
+    periodic V-cycle are layout-independent)."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import make_grid_mesh
+from repro.apps.poisson import Poisson3D
+
+per = (True, True, True)
+multi = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2), periodic=per)
+u_m, i_m = multi.solve("mgcg", tol=1e-10)
+mesh1 = make_grid_mesh(3, dims=(1, 1, 1), devices=jax.devices()[:1])
+single = Poisson3D(nx=18, ny=18, nz=18, mesh=mesh1, periodic=per)
+assert single.grid.global_shape == multi.grid.global_shape
+u_s, i_s = single.solve("mgcg", tol=1e-10)
+a = multi.grid.gather(u_m)
+b = single.grid.gather(u_s)
+err = np.abs(a - b).max() / np.abs(b).max()
+print("iters", i_m.iterations, i_s.iterations, "1-vs-8 err", err)
+assert err < 1e-8, err
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
+    )
+
+
+def test_nullspace_projection_is_per_component():
+    """project_nullspace on a pytree system removes each LEAF's own
+    constant mode: a block-diagonal all-periodic Poisson system whose
+    component means cancel jointly (+c, -c) still converges, and every
+    component comes back mean-zero (a joint-mean projection would leave
+    the system inconsistent and stall)."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import solvers
+from repro.solvers.multigrid import poisson_apply
+
+grid = init_global_grid(10, 10, 10, dims=(2, 2, 2), periodic=(True,) * 3,
+                        dtype=jnp.float64)
+P = grid.n_g(0) - grid.overlap
+sp = (1.0 / P,) * 3
+
+def mode(ix, iy, iz, k):
+    x, y, z = (ix - 1) / P, (iy - 1) / P, (iz - 1) / P
+    return (jnp.sin(2 * jnp.pi * k * x) * jnp.sin(2 * jnp.pi * y)
+            * jnp.sin(2 * jnp.pi * z))
+
+# component rhs with OPPOSITE constant offsets: the joint mean is zero,
+# so only a per-leaf projection makes each block consistent
+b = {
+    "a": grid.from_global_fn(lambda ix, iy, iz: mode(ix, iy, iz, 1) + 3.0),
+    "b": grid.from_global_fn(lambda ix, iy, iz: mode(ix, iy, iz, 2) - 3.0),
+}
+c = grid.ones()
+
+def apply_A(u, c):
+    return jax.tree_util.tree_map(
+        lambda leaf: poisson_apply(grid, leaf, c, sp), u)
+
+x, info = solvers.cg(grid, apply_A, b, tol=1e-9, maxiter=2000,
+                     project_nullspace="constant", args=(c,))
+assert info.converged, (info.iterations, info.relres)
+for kname in ("a", "b"):
+    g = grid.gather(x[kname])[1:-1, 1:-1, 1:-1]
+    print(kname, "mean", g.mean(), "max", np.abs(g).max())
+    assert abs(g.mean()) < 1e-12 * max(np.abs(g).max(), 1.0), kname
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
+    )
+
+
+@pytest.mark.parametrize("ndev", [2])
+def test_periodic_smoke_2rank(ndev):
+    """CI periodic-smoke: one 2-rank periodic implicit (mgcg) two-phase
+    step plus a 2-rank periodic mgcg Poisson solve stay convergent and
+    finite."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.twophase import TwoPhase3D
+from repro.apps.poisson import Poisson3D
+from repro import fields
+
+app = TwoPhase3D(nx=10, ny=10, nz=10, dims=(2, 1, 1), method="mgcg",
+                 tol=1e-8, periodic=(True, True, False))
+S, infos = app.run(1)
+assert len(infos) == 1 and infos[0].converged, infos
+Pe = fields.gather(S.Pe)
+assert np.isfinite(Pe).all() and np.abs(Pe).max() < 10.0
+
+p = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 1, 1),
+              periodic=(True, True, True))
+u, info = p.solve("mgcg", tol=1e-8)
+assert info.converged, (info.iterations, info.relres)
+assert np.isfinite(p.grid.gather(u)).all()
+print("twophase iters", infos[0].iterations, "poisson iters",
+      info.iterations, "OK")
+""",
+        ndev=ndev,
+        timeout=900,
+    )

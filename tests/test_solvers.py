@@ -158,6 +158,31 @@ print("OK")
     )
 
 
+def test_reductions_accumulate_f32_fields_in_f64():
+    """Masked reductions over f32 fields accumulate in f64: a payload
+    whose cascaded-f32 sum collapses (2^24 + many 1.0 cells) still
+    reduces exactly — the stopping-test guarantee behind acc_dtype."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import solvers
+
+grid = init_global_grid(8, 6, 6, dims=(2, 2, 2), dtype=jnp.float32)
+G = np.ones(grid.global_shape, np.float32)
+G[1, 1, 1] = np.float32(2.0 ** 24)   # f32: 2^24 + 1 == 2^24
+A = grid.scatter(G)
+ones = grid.ones(jnp.float32)
+got = float(solvers.dot_g(grid, A, ones))
+want = float(G.astype(np.float64).sum())   # exact in f64
+assert got == want, (got, want)            # f32 accumulation would be short
+assert float(solvers.dot_g(grid, ones, ones)) == G.size
+print("OK")
+""",
+        ndev=8,
+    )
+
+
 def test_reductions_ignore_stale_halos():
     """Ownership mask counts only locally computed cells, so a field with
     garbage in its halo cells still reduces exactly."""

@@ -217,14 +217,57 @@ Q = multi.fluxes(S)
 for q in Q:
     assert np.isfinite(np.asarray(q.data)).all()
 
-# implicit methods still require non-periodic dims (Dirichlet ring)
+# implicit + periodic is now supported (wrap-aware solve masks); the
+# capability check only rejects genuinely unsupported combos
 try:
-    TwoPhase3D(nx=10, ny=10, nz=10, dims=(2, 2, 2), method="mgcg",
-               periodic=per)
-    raise SystemExit("expected ValueError for implicit + periodic")
+    TwoPhase3D(nx=7, ny=7, nz=7, dims=(2, 2, 2), method="mgcg")
+    raise SystemExit("expected ValueError for an uncoarsenable mgcg grid")
 except ValueError as e:
-    assert "periodic" in str(e)
+    assert "coarsen" in str(e)
 print("OK")
 """,
         ndev=8,
+    )
+
+
+def test_periodic_implicit_twophase_single_vs_multi_rank():
+    """Periodic implicit (mgcg) two-phase steps: 8 ranks match 1 rank on
+    the same global problem — the wrap-aware masks, the nonsingular
+    Helmholtz-shifted solve, and the periodic V-cycle are all
+    layout-independent.  cg + overlap (hide_apply) stays consistent."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import make_grid_mesh
+from repro.apps.twophase import TwoPhase3D
+from repro import fields
+
+per = (True, True, False)
+kw = dict(method="mgcg", tol=1e-10, periodic=per)
+multi = TwoPhase3D(nx=10, ny=10, nz=10, dims=(2, 2, 2), **kw)
+S, infos = multi.run(3)
+assert all(i.converged for i in infos)
+mesh1 = make_grid_mesh(3, dims=(1, 1, 1), devices=jax.devices()[:1])
+single = TwoPhase3D(nx=18, ny=18, nz=18, mesh=mesh1, **kw)
+assert single.grid.global_shape == multi.grid.global_shape
+S1, infos1 = single.run(3)
+assert all(i.converged for i in infos1)
+dPe = np.abs(fields.gather(S.Pe) - fields.gather(S1.Pe)).max()
+dphi = np.abs(fields.gather(S.phi) - fields.gather(S1.phi)).max()
+print("mgcg iters", [i.iterations for i in infos],
+      "vs", [i.iterations for i in infos1], "dPe", dPe, "dphi", dphi)
+assert dPe < 1e-12 and dphi < 1e-12, (dPe, dphi)
+
+# the overlapped (hide_apply) implicit operator wraps identically
+hid = TwoPhase3D(nx=10, ny=10, nz=10, dims=(2, 2, 2), method="cg",
+                 overlap=True, tol=1e-10, periodic=per)
+Sh, infosh = hid.run(3)
+assert all(i.converged for i in infosh)
+dPe_h = np.abs(fields.gather(Sh.Pe) - fields.gather(S1.Pe)).max()
+print("cg+hide dPe", dPe_h)
+assert dPe_h < 1e-9, dPe_h
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
     )
