@@ -6,9 +6,15 @@
     §Roofline -> roofline_table      (aggregates the dry-run cells)
     solvers -> solver_bench          (CG / MG-preconditioned CG / pseudo-
                                       transient / multigrid, with and
-                                      without operator comm overlap)
-    stokes  -> stokes_bench          (staggered variable-viscosity Stokes:
-                                      FieldSet CG vs MG-preconditioned CG)
+                                      without operator comm overlap;
+                                      periodic rows; mixed-precision
+                                      cg/f32 + mgcg/f32 rows vs the f64
+                                      reference at the same tolerance)
+    stokes  -> stokes_bench          (full-stress staggered Stokes:
+                                      velocity block under coupled
+                                      staggered-MG vs face/center-cycle
+                                      vs plain CG; Schur-complement CG
+                                      vs Uzawa outer loop)
 
 ``python -m benchmarks.run`` runs all in quick mode; ``--full`` uses the
 larger measurement sizes.

@@ -10,7 +10,11 @@ solve to tolerance, so the figure of merit is two-dimensional:
   exchange + stencil + global reduction, all inside one compiled loop).
 
 Runs the 3-D variable-coefficient Poisson app on an 8-device mesh
-(2 x 2 x 2) with all three solvers of ``repro.solvers``.
+(2 x 2 x 2) with all three solvers of ``repro.solvers``; extra rows cover
+the all-periodic (nullspace-projected) configuration and the
+mixed-precision path (``cg/f32`` / ``mgcg/f32``: end-to-end f32 stencil +
+halos with f64 ``acc_dtype`` reductions, against ``cg/f64@5`` at the same
+f32-friendly tolerance).
 """
 
 from __future__ import annotations
@@ -52,6 +56,25 @@ for label, method in [("cg/per", "cg"), ("mgcg/per", "mgcg")]:
         converged=bool(info.converged), wall_s=wall,
         s_per_iter=wall / max(info.iterations, 1),
     )
+# mixed precision: the SAME problem solved end-to-end in f32 (f32
+# stencil, halos and vector updates; f64 acc_dtype reductions keep the
+# stopping test faithful) vs the f64 reference, both at the f32-friendly
+# tolerance — the iterations-to-tolerance must MATCH (else the f32 path
+# is losing accuracy, not just bandwidth) and the time delta is the
+# bandwidth saving.
+app32 = Poisson3D(nx={nx}, ny={nx}, nz={nx}, dims=(2, 2, 2),
+                  dtype=jnp.float32)
+for label, a, method in [("cg/f64@5", app, "cg"), ("cg/f32", app32, "cg"),
+                         ("mgcg/f32", app32, "mgcg")]:
+    u, info = a.solve(method, tol={f32_tol})  # warm-up
+    t0 = time.perf_counter()
+    u, info = a.solve(method, tol={f32_tol})
+    wall = time.perf_counter() - t0
+    rows[label] = dict(
+        iters=info.iterations, relres=float(info.relres),
+        converged=bool(info.converged), wall_s=wall,
+        s_per_iter=wall / max(info.iterations, 1),
+    )
 print("RESULT" + json.dumps(dict(global_shape=list(app.grid.global_shape),
                                  rows=rows)))
 """
@@ -64,7 +87,9 @@ def run(quick: bool = True):
 
     nx = 18 if quick else 34      # local incl halo; 34 -> 66^3 global (64^3 interior)
     tol = 1e-6
-    out = run_snippet(SNIPPET.format(nx=nx, tol=tol), ndev=8)
+    f32_tol = 1e-5                # attainable by f32 iterates (f64 reductions)
+    out = run_snippet(SNIPPET.format(nx=nx, tol=tol, f32_tol=f32_tol),
+                      ndev=8, timeout=3600)
     line = [l for l in out.splitlines() if l.startswith("RESULT")][0]
     res = json.loads(line[len("RESULT"):])
     shape = res["global_shape"]
@@ -84,6 +109,11 @@ def run(quick: bool = True):
     print(f"  comm overlap (cg+hide vs cg ms/iter): "
           f"{cg_t*1e3:.2f} -> {hide_t*1e3:.2f} "
           f"({(1 - hide_t / cg_t) * 100:+.0f}% change)")
+    r64, r32 = res["rows"]["cg/f64@5"], res["rows"]["cg/f32"]
+    print(f"  mixed precision (cg @ tol {f32_tol}): f64 {r64['iters']} iters "
+          f"{r64['s_per_iter']*1e3:.2f} ms/iter -> f32 {r32['iters']} iters "
+          f"{r32['s_per_iter']*1e3:.2f} ms/iter "
+          f"({(1 - r32['s_per_iter'] / r64['s_per_iter']) * 100:+.0f}% time/iter)")
     return res
 
 

@@ -1,0 +1,26 @@
+"""Shared staggered-stencil arithmetic for the Stokes operators.
+
+The device operator (:mod:`repro.apps.stokes`, local view under
+``shard_map``) and the NumPy oracle (single gathered global array) must
+apply the SAME discrete operator — any drift between them turns the
+oracle test into noise.  The canonical xp-parameterized implementation
+lives in :mod:`repro.stencil.mac` (dependency-free, so the
+location-generic multigrid smoother in :mod:`repro.solvers.multigrid`
+shares the very same spelling); this module re-exports it under the
+historical apps-local name.
+"""
+
+from __future__ import annotations
+
+from repro.stencil.mac import (  # noqa: F401
+    edge_avg, full_stress_apply, full_stress_diag, roll,
+    stripped_apply, stripped_component, stripped_diag,
+    stripped_diag_component,
+)
+
+__all__ = [
+    "roll", "edge_avg",
+    "stripped_apply", "stripped_component",
+    "stripped_diag", "stripped_diag_component",
+    "full_stress_apply", "full_stress_diag",
+]

@@ -1,36 +1,45 @@
 """3-D variable-viscosity Stokes flow on the staggered grid — the
 paper-family flagship (PseudoTransientStokes analogue).
 
-    -div( eta (grad V) ) + grad P = F      (momentum, faces)
-                           div V = 0       (continuity, centers)
+    -div( 2 eta D(V) ) + grad P = F      (momentum, faces)
+                          div V = 0      (continuity, centers)
 
+with the full symmetric-gradient stress ``D(V) = (grad V + grad V^T)/2``
 on the MAC staggering of :mod:`repro.fields`: velocity components on
 their faces (``vx``/``vy``/``vz`` on x/y/z-faces), pressure and viscosity
-in the centers, viscosity averaged onto edges for the shear terms.
-Homogeneous Dirichlet velocity on every boundary face; the pressure
-nullspace (constants) is removed by mean-zero projection over the
-pressure unknowns.
+in the centers, viscosity averaged onto edges for the shear stresses —
+which couple the components (``stress="stripped"`` keeps the historical
+decoupled per-component block for A/B comparisons).  Boundary conditions
+per non-periodic dim: ``bc="noslip"`` (homogeneous Dirichlet on every
+boundary face) or ``bc="freeslip"`` (normal component pinned, tangential
+components stress-free via the staggered boundary helpers: a zero-flux
+ghost ring makes the wall shear vanish).  The pressure nullspace
+(constants) is removed by mean-zero projection over its unknowns.
 
 Solution strategy — the velocity/pressure block split:
 
-* the velocity block ``A`` (per-component variable-viscosity
-  ``-div(eta grad u)`` over the flux-form stencil, SPD on the unknown
-  faces) is solved matrix-free by :func:`repro.solvers.cg.cg` with the
-  WHOLE staggered system as one Krylov vector (a ``FieldSet`` pytree),
-  optionally preconditioned by a multigrid V-cycle
-  (:class:`repro.solvers.preconditioner.CyclePreconditioner`) — the
-  ROADMAP's ``cg(..., apply_M=one_v_cycle)``;
-* the pressure is advanced by viscosity-scaled Uzawa iteration
-  ``P <- P - theta * eta * div V`` (the classic Schur-complement
-  Richardson step: ``diag(eta)`` is spectrally equivalent to the Stokes
-  Schur complement; the minus sign because the momentum equation carries
-  ``+grad P``, i.e. ``div = -grad^T``), with each velocity solve
-  warm-started from the last.
+* the velocity block ``A`` is solved matrix-free by
+  :func:`repro.solvers.cg.cg` with the WHOLE staggered system as one
+  Krylov vector (a ``FieldSet`` pytree), preconditioned by staggered
+  multigrid: the COUPLED tree V-cycle of
+  :func:`repro.solvers.multigrid.make_tree_v_cycle`, which smooths the
+  full-stress operator itself and transfers every component on its own
+  face grid (``precond="face"``/``"center"`` select the per-leaf scalar
+  face cycles resp. the historical cell-centered cycle as baselines);
+* the pressure solves the viscosity-preconditioned SCHUR COMPLEMENT by
+  outer CG: ``(-div A^-1 grad) P = -div A^-1 F``, each matvec one
+  velocity solve, preconditioned by ``z = eta r`` (``diag(eta)`` is
+  spectrally equivalent to the Stokes Schur complement).
+  ``method="uzawa"`` keeps the classic Richardson step
+  ``P <- P - theta eta div V`` for A/B comparisons — Schur-CG reaches
+  the same tolerance in several-fold fewer outer velocity solves.
 
-Validated against an independent NumPy oracle (explicit-slicing stencils,
-per-component masked CG, same Uzawa outer loop) in
-``tests/test_apps.py``; benchmarked (plain vs MG-preconditioned CG on the
-velocity solve) in ``benchmarks/stokes_bench.py``.
+The discrete operator arithmetic is shared with the NumPy oracle
+(:mod:`repro.apps._stencil_np`, parameterized by the array module) so
+the two cannot drift; the oracle's ghost filling, coupled CG and Uzawa
+loop on the gathered global arrays remain independent.  Validated in
+``tests/test_apps.py`` / ``tests/test_stokes_full.py``; benchmarked in
+``benchmarks/stokes_bench.py``.
 """
 
 from __future__ import annotations
@@ -42,17 +51,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P_
 
-from repro.core import init_global_grid
+from repro.core import boundary, init_global_grid
 from repro import fields
 from repro import solvers
 from repro.fields import Field, FieldSet, ops
 from repro.solvers import reductions as red
+from repro.solvers.multigrid import (
+    build_coefficients, level_spacings, make_tree_v_cycle,
+)
+from . import _stencil_np as stn
 
-
-def _roll(a, d: int, s: int):
-    """Value at index ``i`` becomes ``a[i + s]`` (local view; the wrapped
-    planes land only on ring/halo cells, which are masked or refreshed)."""
-    return jnp.roll(a, -s, axis=d)
+_COMPONENTS = ("vx", "vy", "vz")
+_FACE_LOCS = ("xface", "yface", "zface")
+STRESSES = ("full", "stripped")
+BCS = ("noslip", "freeslip")
 
 
 @dataclasses.dataclass
@@ -60,11 +72,74 @@ class StokesInfo:
     """Outcome of a Stokes solve (host-side scalars)."""
 
     outer_iterations: int
-    inner_iterations: int      # total CG iterations across outer steps
+    inner_iterations: int      # total CG iterations across velocity solves
     first_inner_iterations: int
     relres_momentum: float
     relres_div: float          # final ||div V|| / initial ||div V||
     converged: bool
+
+
+class StressCyclePreconditioner:
+    """Coupled staggered V-cycle on the (full-stress) velocity block.
+
+    The ``apply_M`` object for :func:`repro.solvers.cg.cg`: ``setup``
+    binds the center viscosity operand and builds ONE
+    :func:`repro.solvers.multigrid.make_tree_v_cycle` over the coarsened
+    viscosity hierarchy — the cycle smooths the same coupled operator CG
+    iterates on (shared arithmetic via :mod:`repro.apps._stencil_np`)
+    and transfers each component on its own face grid.  With equal
+    pre/post sweeps the cycle is symmetric per construction, so CG stays
+    CG.
+    """
+
+    # Defaults recorded on the 34^3 full-stress block (tol 1e-8): two
+    # degree-2 Chebyshev cycles -> 9 CG iterations vs 23 for the center
+    # baseline; single weaker cycles land at 13-18.  Jacobi damping must
+    # stay < 2/3 (Gershgorin row sum of the coupled operator reaches
+    # 3 on D^-1 A; omega = 0.7 diverges outright).
+    def __init__(self, grid, spacing, *, stress: str = "full",
+                 ncycles: int = 2, nu: int = 2, omega: float = 0.6,
+                 coarse_sweeps: int = 30, smoother: str = "chebyshev",
+                 max_levels: int | None = None):
+        if stress not in STRESSES:
+            raise ValueError(f"unknown stress {stress!r}; pick from {STRESSES}")
+        self.grid = grid
+        self.grids = grid.hierarchy(max_levels=max_levels)
+        if len(self.grids) < 2:
+            raise ValueError(
+                f"grid {grid.local_shape} cannot coarsen; multigrid needs >= 2 levels")
+        self.hs = level_spacings(grid, self.grids, spacing)
+        self.stress = stress
+        self.ncycles = int(ncycles)
+        self.kw = dict(nu_pre=nu, nu_post=nu, omega=omega,
+                       coarse_sweeps=coarse_sweeps, smoother=smoother)
+
+    def setup(self, eta, *rest):
+        cs = build_coefficients(self.grid, self.grids, eta.data)
+        apply_np = stn.full_stress_apply if self.stress == "full" \
+            else stn.stripped_apply
+
+        def apply_level(level, u):
+            return tuple(apply_np(jnp, u, cs[level], self.hs[level]))
+
+        def diag_level(level):
+            return tuple(stn.full_stress_diag(jnp, cs[level], self.hs[level])
+                         if self.stress == "full" else
+                         stn.stripped_diag(jnp, cs[level], self.hs[level]))
+
+        v_cycle, _ = make_tree_v_cycle(
+            self.grid, self.grids, _FACE_LOCS, apply_level, diag_level,
+            **self.kw)
+
+        def M(r: FieldSet) -> FieldSet:
+            f = tuple(r[k].data for k in _COMPONENTS)
+            e = tuple(jnp.zeros_like(fi) for fi in f)
+            for _ in range(self.ncycles):
+                e = v_cycle(0, e, f)
+            return FieldSet(**{k: r[k].with_data(ei)
+                               for k, ei in zip(_COMPONENTS, e)})
+
+        return M
 
 
 @dataclasses.dataclass
@@ -75,6 +150,8 @@ class Stokes3D:
     lx: float = 1.0         # domain edge length along x (y/z scale with N)
     eta_amp: float = 0.5    # eta = 1 + amp * (smooth); keep < 1 for SPD
     theta: float = 1.3      # Uzawa step (times local eta); stable < ~1.8
+    stress: str = "full"    # "full" symmetric-gradient | "stripped" block
+    bc: str = "noslip"      # "noslip" | "freeslip" (tangential stress-free)
     dims: tuple | None = None
     mesh: object = None     # optional explicit device mesh (subset runs)
     dtype: object = jnp.float64
@@ -86,6 +163,10 @@ class Stokes3D:
                 'jax.config.update("jax_enable_x64", True) '
                 "(or pass dtype=jnp.float32)"
             )
+        if self.stress not in STRESSES:
+            raise ValueError(f"unknown stress {self.stress!r}; pick from {STRESSES}")
+        if self.bc not in BCS:
+            raise ValueError(f"unknown bc {self.bc!r}; pick from {BCS}")
         self.grid = init_global_grid(self.nx, self.ny, self.nz,
                                      dims=self.dims, mesh=self.mesh,
                                      dtype=self.dtype)
@@ -138,35 +219,43 @@ class Stokes3D:
     # ------------------------------------------------------------------
     # operators (local view)
     # ------------------------------------------------------------------
-    def apply_A(self, V: FieldSet, eta: Field) -> FieldSet:
-        """Velocity block: ``-div(eta grad u)`` per face component.
+    def _fill_ghosts(self, V: FieldSet) -> FieldSet:
+        """Free-slip ghost ring: zero-flux tangential planes (local view).
 
-        Staggered coefficient placement: along the component's own dim the
-        flux coefficient is the CENTER viscosity (the natural point
-        between two like faces); across dims it is the 4-point EDGE
-        average.  Output is zeroed outside each component's unknown faces.
+        For component ``d`` and each non-staggered dim ``dd`` the ring
+        planes are ghosts; ``neumann0`` copies the first interior plane
+        there, so the wall shear rate ``d_dd v_d`` vanishes.  Along the
+        component's own dim the boundary faces stay pinned at zero (the
+        normal velocity), exactly as under no-slip.
         """
-        V = fields.update_halo(self.grid, V)
-        h2 = [s ** 2 for s in self.spacing]
-        e0 = eta.data
+        topo = self.grid.topo
         out = {}
         for name, f in V.items():
-            d = f.stagger_dim
-            u = f.data
-            acc = jnp.zeros_like(u)
+            a = f.data
             for dd in range(self.grid.ndims):
-                if dd == d:
-                    ep = _roll(e0, d, +1)
-                    acc += (ep * (_roll(u, d, +1) - u)
-                            - e0 * (u - _roll(u, d, -1))) / h2[d]
-                else:
-                    ee = 0.25 * (e0 + _roll(e0, d, +1) + _roll(e0, dd, +1)
-                                 + _roll(_roll(e0, d, +1), dd, +1))
-                    acc += (ee * (_roll(u, dd, +1) - u)
-                            - _roll(ee, dd, -1) * (u - _roll(u, dd, -1))) \
-                        / h2[dd]
-            out[name] = f.with_data(-acc * f.interior_mask())
+                if dd == f.stagger_dim or topo.periodic[dd]:
+                    continue
+                a = boundary.neumann0(topo, a, dd)
+            out[name] = f.with_data(a)
         return FieldSet(**out)
+
+    def apply_A(self, V: FieldSet, eta: Field) -> FieldSet:
+        """Velocity block: full-stress ``-div(2 eta D(V))`` per component
+        (or the stripped ``-div(eta grad v_d)`` for
+        ``stress="stripped"``); arithmetic shared with the NumPy oracle
+        via :mod:`repro.apps._stencil_np`.  Output is zeroed outside each
+        component's unknown faces.
+        """
+        V = fields.update_halo(self.grid, V)
+        if self.bc == "freeslip":
+            V = self._fill_ghosts(V)
+        raw = [V[k].data for k in _COMPONENTS]
+        fn = stn.full_stress_apply if self.stress == "full" \
+            else stn.stripped_apply
+        out = fn(jnp, raw, eta.data, self.spacing)
+        return FieldSet(**{
+            k: V[k].with_data(o * V[k].interior_mask())
+            for k, o in zip(_COMPONENTS, out)})
 
     def _rhs(self, P: Field) -> FieldSet:
         """Momentum right-hand side ``F - grad P`` (host level)."""
@@ -179,30 +268,139 @@ class Stokes3D:
             self._rhs_fn = rhs
         return self._rhs_fn(self.F, P)
 
+    def _grad_P(self, P: Field) -> FieldSet:
+        """``grad P`` as a face FieldSet (host level)."""
+        if not hasattr(self, "_grad_fn"):
+            @self.grid.parallel
+            def gradp(P):
+                G = ops.grad(P, self.spacing)
+                return FieldSet(vx=G.x, vy=G.y, vz=G.z)
+
+            self._grad_fn = gradp
+        return self._grad_fn(P)
+
     # ------------------------------------------------------------------
     # velocity solve (the flagship CG workload)
     # ------------------------------------------------------------------
-    def _precond(self):
-        if not hasattr(self, "_mg_precond"):
-            self._mg_precond = solvers.CyclePreconditioner(
-                self.grid, self.spacing)
-        return self._mg_precond
+    PRECONDS = (True, "stress", "face", "center", False, None)
+
+    def _precond(self, which):
+        """Velocity preconditioner: "stress" (coupled staggered tree
+        cycle, the default), "face" (per-leaf scalar face cycles),
+        "center" (per-leaf cell-centered cycles — the historical
+        baseline with misaligned transfers), or None."""
+        if which is True:
+            which = "stress"
+        if which in (False, None):
+            return None
+        cache = self.__dict__.setdefault("_precond_cache", {})
+        if which not in cache:
+            if which == "stress":
+                cache[which] = StressCyclePreconditioner(
+                    self.grid, self.spacing, stress=self.stress)
+            elif which in ("face", "center"):
+                cache[which] = solvers.CyclePreconditioner(
+                    self.grid, self.spacing,
+                    per_location=(which == "face"))
+            else:
+                raise ValueError(
+                    f"unknown precond {which!r}; pick from {self.PRECONDS}")
+        return cache[which]
 
     def velocity_solve(self, P: Field | None = None, x0: FieldSet | None = None,
-                       precond: bool = True, tol: float = 1e-8,
+                       precond="stress", tol: float = 1e-8,
                        maxiter: int = 2000):
         """Solve ``A V = F - grad P`` for the staggered velocity system.
 
         One :func:`repro.solvers.cg.cg` call on the whole ``FieldSet``;
-        ``precond`` switches the multigrid V-cycle preconditioner on the
-        center viscosity (each face component preconditioned by the
-        spectrally equivalent cell-centered cycle).
+        ``precond`` picks the multigrid preconditioner (see
+        :meth:`_precond`).
         """
         b = self._rhs(P) if P is not None else self.F
         return solvers.cg(
             self.grid, self.apply_A, b, x0=x0, tol=tol, maxiter=maxiter,
-            apply_M=self._precond() if precond else None,
+            apply_M=self._precond(precond),
             args=(self.eta,))
+
+    # ------------------------------------------------------------------
+    # pressure-space helpers (host level, jitted shard_maps)
+    # ------------------------------------------------------------------
+    def _neg_div(self, V: FieldSet):
+        """``(-div V)`` projected mean-zero over the pressure unknowns,
+        and its deduplicated global norm.  The Schur matvec tail: with
+        ``A W = grad p`` this IS ``(-div A^-1 grad) p``."""
+        g = self.grid
+        key = ("apps.stokes.negdiv", self.dtype)
+        if key not in g._jit_cache:
+            def nd(V):
+                mc = fields.interior_mask(g, "center", self.dtype)
+                ms = fields.solve_mask(g, "center", self.dtype)
+                d = -ops.div(V, self.spacing).data * mc
+                mean = red.masked_mean(g, d, ms)
+                d = (d - mean.astype(d.dtype)) * mc
+                n = jnp.sqrt(red.dot(g, d, d, ms))
+                return Field(g, g.update_halo(d), "center"), n
+
+            sm = jax.shard_map(
+                nd, mesh=g.mesh, in_specs=(g.spec,),
+                out_specs=(g.spec, P_()), check_vma=False)
+            g._jit_cache[key] = jax.jit(sm)
+        d, n = g._jit_cache[key](V)
+        return d, float(n)
+
+    def _pdot(self, a: Field, b: Field) -> float:
+        """Deduplicated dot over the pressure unknowns (host level,
+        compiled once — the Schur loop calls this ~3x per iteration)."""
+        g = self.grid
+        key = ("apps.stokes.pdot", self.dtype)
+        if key not in g._jit_cache:
+            def pdot(x, y):
+                return red.dot(g, x, y,
+                               fields.solve_mask(g, "center", self.dtype))
+
+            sm = jax.shard_map(
+                pdot, mesh=g.mesh, in_specs=(g.spec, g.spec),
+                out_specs=P_(), check_vma=False)
+            g._jit_cache[key] = jax.jit(sm)
+        return float(g._jit_cache[key](a.data, b.data))
+
+    def _schur_update(self, x: Field, y: Field, scale: float) -> Field:
+        """``x + scale * y`` on the pressure unknowns (host level)."""
+        g = self.grid
+        key = ("apps.stokes.paxpy", self.dtype)
+        if key not in g._jit_cache:
+            def axpy(x, y, s):
+                mc = fields.interior_mask(g, "center", self.dtype)
+                return Field(g, (x + s.astype(x.dtype) * y) * mc, "center")
+
+            sm = jax.shard_map(
+                axpy, mesh=g.mesh, in_specs=(g.spec, g.spec, P_()),
+                out_specs=g.spec, check_vma=False)
+            g._jit_cache[key] = jax.jit(sm)
+        return g._jit_cache[key](x.data, y.data, jnp.asarray(scale))
+
+    def _apply_Ms(self, r: Field) -> Field:
+        """Schur preconditioner ``z = eta r``, projected mean-zero.
+
+        ``diag(eta)`` is spectrally equivalent to the (inverse) Stokes
+        Schur complement — the same physics behind the viscosity-scaled
+        Uzawa step, now as a true SPD preconditioner inside CG.
+        """
+        g = self.grid
+        key = ("apps.stokes.Ms", self.dtype)
+        if key not in g._jit_cache:
+            def ms_(r, eta):
+                mc = fields.interior_mask(g, "center", self.dtype)
+                ms = fields.solve_mask(g, "center", self.dtype)
+                z = eta * r * mc
+                mean = red.masked_mean(g, z, ms)
+                return Field(g, (z - mean.astype(z.dtype)) * mc, "center")
+
+            sm = jax.shard_map(
+                ms_, mesh=g.mesh, in_specs=(g.spec, g.spec),
+                out_specs=g.spec, check_vma=False)
+            g._jit_cache[key] = jax.jit(sm)
+        return g._jit_cache[key](r.data, self.eta.data)
 
     # ------------------------------------------------------------------
     # pressure update (viscosity-scaled Uzawa step) + diagnostics
@@ -261,17 +459,33 @@ class Stokes3D:
         return float(rm), float(dn)
 
     # ------------------------------------------------------------------
-    # full solve: Uzawa outer loop
+    # full solve: Schur-complement CG (default) or Uzawa outer loop
     # ------------------------------------------------------------------
     def solve(self, tol: float = 1e-8, outer_maxiter: int = 400,
-              inner_tol: float | None = None, precond: bool = True):
+              inner_tol: float | None = None, precond="stress",
+              method: str = "schur"):
         """Solve the full Stokes system.  Returns ``(V, P, StokesInfo)``.
 
-        Converges when ``||div V||`` has dropped by ``tol`` relative to
-        the first outer iterate (each velocity solve is converged to
-        ``inner_tol``, default ``tol``, warm-started from the last).
+        ``method="schur"`` runs CG on the viscosity-preconditioned Schur
+        complement ``(-div A^-1 grad) P = -div A^-1 F`` — each matvec
+        one velocity solve to ``inner_tol`` (default ``tol * 1e-2``,
+        floored at 1e-12; the Schur matvec is only as exact as the inner
+        solve, so the inner tolerance tracks the outer one).
+        ``method="uzawa"`` keeps the Richardson loop
+        ``P <- P - theta eta div V`` (velocity solves to the same
+        ``inner_tol``, warm-started).  Both converge when ``||div V||``
+        has dropped by ``tol`` relative to the divergence of the first
+        velocity iterate (``A V0 = F``), so their outer iteration counts
+        are directly comparable.
         """
-        inner_tol = tol if inner_tol is None else inner_tol
+        if method not in ("schur", "uzawa"):
+            raise ValueError(f"unknown method {method!r}")
+        inner_tol = max(tol * 1e-2, 1e-12) if inner_tol is None else inner_tol
+        if method == "uzawa":
+            return self._solve_uzawa(tol, outer_maxiter, inner_tol, precond)
+        return self._solve_schur(tol, outer_maxiter, inner_tol, precond)
+
+    def _solve_uzawa(self, tol, outer_maxiter, inner_tol, precond):
         V = FieldSet(vx=fields.zeros(self.grid, "xface", self.dtype),
                      vy=fields.zeros(self.grid, "yface", self.dtype),
                      vz=fields.zeros(self.grid, "zface", self.dtype))
@@ -300,19 +514,72 @@ class Stokes3D:
             converged=relres_div <= tol,
         )
 
-    # ------------------------------------------------------------------
-    # NumPy oracle — independent explicit-slicing implementation
-    # ------------------------------------------------------------------
-    def oracle(self, tol: float = 1e-10, inner_tol: float = 1e-12,
-               outer_maxiter: int = 5000):
-        """Solve the same discrete system in NumPy on the global grid.
+    @staticmethod
+    def _check_inner(info, what):
+        """Schur matvecs are only as exact as the inner solves — an
+        unconverged one silently poisons the outer CG recurrence, so
+        fail loudly instead."""
+        if not info.converged:
+            raise RuntimeError(
+                f"Schur-CG inner velocity solve ({what}) did not "
+                f"converge: relres {info.relres:.2e} after "
+                f"{info.iterations} iterations — raise inner_tol/"
+                "maxiter or strengthen the velocity preconditioner")
 
-        Returns ``(Vx, Vy, Vz, P)`` as full global-shape arrays (dead
-        planes zero, P mean-zero over its unknowns).
-        """
+    def _solve_schur(self, tol, outer_maxiter, inner_tol, precond):
+        # b_S = -div A^-1 F: one velocity solve for the rhs (and the
+        # warm start of the final velocity recovery).
+        V0, info0 = self.velocity_solve(precond=precond, tol=inner_tol)
+        self._check_inner(info0, "rhs A V0 = F")
+        inner_total = first_inner = info0.iterations
+        b_S, d0 = self._neg_div(V0)
+        d0 = d0 if d0 > 0 else 1.0
+        P = fields.zeros(self.grid, "center", self.dtype)
+        r = b_S
+        z = self._apply_Ms(r)
+        p = z
+        rz = self._pdot(r, z)
+        res = self._pdot(r, r) ** 0.5
+        k = 0
+        while res > tol * d0 and k < outer_maxiter:
+            k += 1
+            # Schur matvec: one velocity solve (A W = grad p) per CG step.
+            G = self._grad_P(p)
+            W, wi = solvers.cg(
+                self.grid, self.apply_A, G, tol=inner_tol, maxiter=2000,
+                apply_M=self._precond(precond), args=(self.eta,))
+            self._check_inner(wi, f"matvec A W = grad p, outer step {k}")
+            inner_total += wi.iterations
+            Sp, _ = self._neg_div(W)
+            alpha = rz / self._pdot(p, Sp)
+            P = self._schur_update(P, p, alpha)
+            r = self._schur_update(r, Sp, -alpha)
+            z = self._apply_Ms(r)
+            rz_new = self._pdot(r, z)
+            p = self._schur_update(z, p, rz_new / rz)
+            rz = rz_new
+            res = self._pdot(r, r) ** 0.5
+        # Recover the velocity for the final pressure (warm start: V0).
+        V, infoF = self.velocity_solve(P=P, x0=V0, precond=precond,
+                                       tol=inner_tol)
+        self._check_inner(infoF, "final A V = F - grad P")
+        inner_total += infoF.iterations
+        rm, _ = self.residuals(V, P)
+        relres_div = res / d0
+        return V, P, StokesInfo(
+            outer_iterations=k, inner_iterations=inner_total,
+            first_inner_iterations=first_inner,
+            relres_momentum=rm, relres_div=relres_div,
+            converged=relres_div <= tol,
+        )
+
+    # ------------------------------------------------------------------
+    # NumPy oracle — single-array implementation on the gathered grid
+    # ------------------------------------------------------------------
+    def _oracle_parts(self):
+        """Gathered global arrays + the oracle's operator application."""
         g = self.grid
         N = g.global_shape
-        h2 = [float(s) ** 2 for s in self.spacing]
         eta = fields.gather(self.eta).astype(np.float64)
 
         def pad_valid(f):
@@ -330,88 +597,121 @@ class Stokes3D:
                 sl[d] = slice(1, N[d] - 2)
             return tuple(sl)
 
-        def shift(a, reg, axis, s):
-            sl = list(reg)
-            r = sl[axis]
-            sl[axis] = slice(r.start + s, r.stop + s)
-            return a[tuple(sl)]
+        freeslip = self.bc == "freeslip"
 
-        # Edge viscosities (full arrays, dead planes zero).
-        def edge_eta(d, dd):
-            ee = np.zeros(N)
-            dst = [slice(None)] * 3
-            src = []
-            for bits in ((0, 0), (1, 0), (0, 1), (1, 1)):
-                sl = [slice(None)] * 3
-                sl[d] = slice(bits[0], N[d] - 1 + bits[0])
-                sl[dd] = slice(bits[1], N[dd] - 1 + bits[1])
-                src.append(eta[tuple(sl)])
-            dst[d] = slice(0, -1)
-            dst[dd] = slice(0, -1)
-            ee[tuple(dst)] = 0.25 * sum(src)
-            return ee
-
-        ee_cache = {(d, dd): edge_eta(d, dd)
-                    for d in range(3) for dd in range(3) if d != dd}
-
-        def A_np(u, d):
-            reg = region(d)
-            u0 = u[reg]
-            acc = np.zeros_like(u0)
-            for dd in range(3):
-                if dd == d:
-                    acc += (shift(eta, reg, d, 1) * (shift(u, reg, d, 1) - u0)
-                            - eta[reg] * (u0 - shift(u, reg, d, -1))) / h2[d]
-                else:
-                    ee = ee_cache[(d, dd)]
-                    acc += (ee[reg] * (shift(u, reg, dd, 1) - u0)
-                            - shift(ee, reg, dd, -1)
-                            * (u0 - shift(u, reg, dd, -1))) / h2[dd]
-            out = np.zeros(N)
-            out[reg] = -acc
+        def fill_ghosts(V):
+            """The oracle's ghost ring: the gathered-array mirror of
+            :meth:`_fill_ghosts` (free-slip zero-flux tangential planes;
+            everything stays zero under no-slip)."""
+            if not freeslip:
+                return V
+            out = []
+            for d, u in enumerate(V):
+                u = u.copy()
+                for dd in range(3):
+                    if dd == d:
+                        continue
+                    lo = [slice(None)] * 3
+                    hi = [slice(None)] * 3
+                    lo[dd], hi[dd] = 0, 1
+                    u[tuple(lo)] = u[tuple(hi)]
+                    lo[dd], hi[dd] = N[dd] - 1, N[dd] - 2
+                    u[tuple(lo)] = u[tuple(hi)]
+                out.append(u)
             return out
 
-        def grad_np(P, d):
+        apply_raw = stn.full_stress_apply if self.stress == "full" \
+            else stn.stripped_apply
+        h = self.spacing
+
+        def A_np(V):
+            """The velocity block on the global arrays (region output)."""
+            raw = apply_raw(np, fill_ghosts(V), eta, h)
+            out = []
+            for d in range(3):
+                o = np.zeros(N)
+                o[region(d)] = raw[d][region(d)]
+                out.append(o)
+            return out
+
+        def grad_np(Pr, d):
             reg = region(d)
+            sl = list(reg)
+            r_ = sl[d]
+            sl[d] = slice(r_.start + 1, r_.stop + 1)
             out = np.zeros(N)
-            out[reg] = (shift(P, reg, d, 1) - P[reg]) / self.spacing[d]
+            out[reg] = (Pr[tuple(sl)] - Pr[reg]) / h[d]
             return out
 
         def div_np(V):
             reg = region()
             out = np.zeros(N)
-            out[reg] = sum(
-                (V[d][reg] - shift(V[d], reg, d, -1)) / self.spacing[d]
-                for d in range(3))
+            for d in range(3):
+                sl = list(reg)
+                r_ = sl[d]
+                sl[d] = slice(r_.start - 1, r_.stop - 1)
+                out[reg] += (V[d][reg] - V[d][tuple(sl)]) / h[d]
             return out
 
-        def cg_np(apply_A, b, x, reg, tol, maxiter=20000):
-            r = np.zeros(N)
-            r[reg] = (b - apply_A(x))[reg]
-            p = r.copy()
-            rs = float((r[reg] ** 2).sum())
-            bn = float((b[reg] ** 2).sum()) ** 0.5 or 1.0
+        return N, eta, F, region, A_np, grad_np, div_np
+
+    def oracle_apply(self, V):
+        """Oracle operator application for distributed-vs-global checks.
+
+        ``V`` is a 3-list of full global-shape arrays (dead planes and
+        pinned faces zero); returns the 3 global result arrays of the
+        same discrete operator the device applies.
+        """
+        _, _, _, _, A_np, _, _ = self._oracle_parts()
+        return A_np([np.asarray(v, np.float64) for v in V])
+
+    def oracle(self, tol: float = 1e-10, inner_tol: float = 1e-12,
+               outer_maxiter: int = 5000):
+        """Solve the same discrete system in NumPy on the global grid.
+
+        Coupled-CG velocity solves (all three components as one Krylov
+        vector, like the device) inside a viscosity-scaled Uzawa outer
+        loop — deliberately NOT the device's Schur-CG, so the two paths
+        agree only if they solve the same discrete system.  Returns
+        ``(Vx, Vy, Vz, P)`` as full global-shape arrays (dead planes
+        zero, P mean-zero over its unknowns).
+        """
+        N, eta, F, region, A_np, grad_np, div_np = self._oracle_parts()
+        regs = [region(d) for d in range(3)]
+        regc = region()
+
+        def dot3(a, b):
+            return sum(float((a[d][regs[d]] * b[d][regs[d]]).sum())
+                       for d in range(3))
+
+        def cg3(b, x, tol, maxiter=20000):
+            r = [np.zeros(N) for _ in range(3)]
+            Ax = A_np(x)
+            for d in range(3):
+                r[d][regs[d]] = (b[d] - Ax[d])[regs[d]]
+            p = [ri.copy() for ri in r]
+            rs = dot3(r, r)
+            bn = dot3(b, b) ** 0.5 or 1.0
             for _ in range(maxiter):
                 if rs ** 0.5 <= tol * bn:
                     break
-                Ap = apply_A(p)
-                alpha = rs / float((p[reg] * Ap[reg]).sum())
-                x = x + alpha * p
-                r[reg] -= alpha * Ap[reg]
-                rs_new = float((r[reg] ** 2).sum())
-                p = r + (rs_new / rs) * p
+                Ap = A_np(p)
+                alpha = rs / dot3(p, Ap)
+                for d in range(3):
+                    x[d] = x[d] + alpha * p[d]
+                    r[d][regs[d]] -= alpha * Ap[d][regs[d]]
+                rs_new = dot3(r, r)
+                beta = rs_new / rs
+                p = [r[d] + beta * p[d] for d in range(3)]
                 rs = rs_new
             return x
 
         V = [np.zeros(N) for _ in range(3)]
         P = np.zeros(N)
-        regc = region()
         d0 = None
         for _ in range(outer_maxiter):
-            for d in range(3):
-                rhs = F[d] - grad_np(P, d)
-                V[d] = cg_np(lambda u, d=d: A_np(u, d), rhs, V[d],
-                             region(d), inner_tol)
+            rhs = [F[d] - grad_np(P, d) for d in range(3)]
+            V = cg3(rhs, V, inner_tol)
             divV = div_np(V)
             dn = float((divV[regc] ** 2).sum()) ** 0.5
             if d0 is None:

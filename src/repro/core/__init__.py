@@ -13,6 +13,7 @@ from .halo import update_halo
 from .hide import hide_communication
 from .grid import ImplicitGlobalGrid, init_global_grid
 from . import boundary
+from . import locations
 
 __all__ = [
     "CartesianTopology",
@@ -23,4 +24,5 @@ __all__ = [
     "ImplicitGlobalGrid",
     "init_global_grid",
     "boundary",
+    "locations",
 ]

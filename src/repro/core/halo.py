@@ -20,6 +20,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from .locations import _STAGGER_DIM as _LOC_STAGGER_DIM
 from .topology import CartesianTopology
 
 
@@ -53,9 +54,10 @@ def _update_one_dim(topo: CartesianTopology, A: jax.Array, gdim: int, adim: int,
     return A
 
 
-# Staggering dim per field location (mirrors repro.fields; kept here so the
-# core stays import-free of the fields subsystem).
-_STAGGER_DIM = {None: None, "center": None, "xface": 0, "yface": 1, "zface": 2}
+# Staggering dim per field location — the canonical table lives in
+# repro.core.locations (shared with the solvers and fields layers);
+# bare arrays (location None) exchange like centers.
+_STAGGER_DIM = {None: None, **_LOC_STAGGER_DIM}
 
 
 def update_halo(

@@ -1,0 +1,90 @@
+"""Staggering locations — the canonical tables and location-aware masks.
+
+The shape-uniform staggering convention (see :mod:`repro.fields.field`)
+tags every grid array with a *location*: ``center`` (entry ``i`` at node
+``i``) or ``xface``/``yface``/``zface`` (entry ``i`` along the staggered
+dim at the face ``i + 1/2`` between nodes ``i`` and ``i + 1``; the
+trailing plane ``i = N - 1`` is a masked **dead plane**).
+
+This module is the single source of truth for that bookkeeping.  It sits
+in :mod:`repro.core` because all three layers above need it — the halo
+exchange (:mod:`repro.core.halo`), the solvers (location-generic
+multigrid transfers and smoother masks in :mod:`repro.solvers`), and the
+field subsystem (:mod:`repro.fields`) — and ``core`` is the only layer
+none of them depends on circularly.  The mask builders are local-view
+functions (they read the rank coordinate) taking any grid object with
+the :class:`repro.core.grid.ImplicitGlobalGrid` interface; they are
+duck-typed so this module imports nothing from the rest of ``core``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LOCATIONS = ("center", "xface", "yface", "zface")
+_STAGGER_DIM = {"center": None, "xface": 0, "yface": 1, "zface": 2}
+
+
+def stagger_dim(loc: str) -> int | None:
+    """Grid dimension a location is staggered along (None for center)."""
+    try:
+        return _STAGGER_DIM[loc]
+    except KeyError:
+        raise ValueError(f"unknown location {loc!r}; expected one of {LOCATIONS}")
+
+
+def face_location(dim: int) -> str:
+    """Face location staggered along grid dimension ``dim``."""
+    return ("xface", "yface", "zface")[dim]
+
+
+def loc_of(x, default: str = "center") -> str:
+    """Location of a field-like object (``repro.fields.Field`` or any
+    object with a ``loc`` attribute); ``default`` for raw arrays."""
+    return getattr(x, "loc", default)
+
+
+def is_field_node(x) -> bool:
+    """True for a ``repro.fields.Field`` pytree node, detected by its
+    duck-typed markers so lower layers need not import the package."""
+    return getattr(x, "_staggered_tree", False) and hasattr(x, "loc")
+
+
+def data_of(x):
+    """Underlying array of a field-like object (identity for arrays)."""
+    return getattr(x, "data", x)
+
+
+def valid_mask(grid, loc: str, dtype=None):
+    """1.0 on real points of ``loc`` (excludes the staggered dead plane)."""
+    dtype = dtype or grid.dtype
+    m = jnp.ones(grid.local_shape, dtype)
+    sd = stagger_dim(loc)
+    if sd is not None:
+        gidx = grid.local_global_indices()
+        m = m * (gidx[sd] < grid.n_g(sd) - 1).astype(dtype)
+    return m
+
+
+def interior_mask(grid, loc: str, dtype=None):
+    """1.0 on the unknowns of a field at ``loc``.
+
+    Along a non-staggered Dirichlet dim the boundary ring is the usual
+    global ``[0, w)`` / ``[N - w, N)``; along a staggered Dirichlet dim
+    the boundary *faces* are ``[0, w)`` and ``[N - 1 - w, N - 1)`` (the
+    dead plane ``N - 1`` is excluded too).  ``w`` is the grid halo
+    width.  Periodic dims have no pinned planes — the ring (and, on the
+    staggered dim, the formerly dead plane) is a live wrap duplicate
+    maintained by the halo exchange — so they are left unmasked.
+    """
+    dtype = dtype or grid.dtype
+    w = grid.halo
+    m = jnp.ones(grid.local_shape, dtype)
+    gidx = grid.local_global_indices()
+    sd = stagger_dim(loc)
+    for d in range(grid.ndims):
+        if grid.topo.periodic[d]:
+            continue
+        hi = grid.n_g(d) - w - (1 if d == sd else 0)
+        m = m * ((gidx[d] >= w) & (gidx[d] < hi)).astype(dtype)
+    return m

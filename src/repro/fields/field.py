@@ -46,24 +46,12 @@ import numpy as np
 
 from repro.core import halo as _halo
 from repro.core import hide as _hide
+from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
+from repro.core.locations import (           # canonical location tables
+    LOCATIONS, face_location, stagger_dim,
+)
 from repro.solvers import reductions as red
-
-LOCATIONS = ("center", "xface", "yface", "zface")
-_STAGGER_DIM = {"center": None, "xface": 0, "yface": 1, "zface": 2}
-
-
-def stagger_dim(loc: str) -> int | None:
-    """Grid dimension a location is staggered along (None for center)."""
-    try:
-        return _STAGGER_DIM[loc]
-    except KeyError:
-        raise ValueError(f"unknown location {loc!r}; expected one of {LOCATIONS}")
-
-
-def face_location(dim: int) -> str:
-    """Face location staggered along grid dimension ``dim``."""
-    return ("xface", "yface", "zface")[dim]
 
 
 def valid_count(grid: ImplicitGlobalGrid, loc: str, dim: int) -> int:
@@ -250,14 +238,12 @@ def map_fields(fn, tree, *rest):
 # ---------------------------------------------------------------------------
 
 def valid_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
-    """1.0 on real points of ``loc`` (excludes the staggered dead plane)."""
-    dtype = dtype or grid.dtype
-    m = jnp.ones(grid.local_shape, dtype)
-    sd = stagger_dim(loc)
-    if sd is not None:
-        gidx = grid.local_global_indices()
-        m = m * (gidx[sd] < grid.n_g(sd) - 1).astype(dtype)
-    return m
+    """1.0 on real points of ``loc`` (excludes the staggered dead plane).
+
+    Canonical implementation in :mod:`repro.core.locations` (shared with
+    the location-generic multigrid machinery in :mod:`repro.solvers`).
+    """
+    return _loc.valid_mask(grid, loc, dtype)
 
 
 def owned_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
@@ -281,23 +267,21 @@ def interior_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
     width.  Periodic dims have no pinned planes — the ring (and, on the
     staggered dim, the formerly dead plane) is a live wrap duplicate
     maintained by the halo exchange — so they are left unmasked.
+
+    Canonical implementation in :mod:`repro.core.locations` (shared with
+    the location-generic multigrid machinery in :mod:`repro.solvers`).
     """
-    dtype = dtype or grid.dtype
-    w = grid.halo
-    m = jnp.ones(grid.local_shape, dtype)
-    gidx = grid.local_global_indices()
-    sd = stagger_dim(loc)
-    for d in range(grid.ndims):
-        if grid.topo.periodic[d]:
-            continue
-        hi = grid.n_g(d) - w - (1 if d == sd else 0)
-        m = m * ((gidx[d] >= w) & (gidx[d] < hi)).astype(dtype)
-    return m
+    return _loc.interior_mask(grid, loc, dtype)
 
 
 def solve_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
-    """Reduction mask over the unknowns of ``loc``, each counted once."""
-    return owned_mask(grid, loc, dtype) * interior_mask(grid, loc, dtype)
+    """Reduction mask over the unknowns of ``loc``, each counted once.
+
+    Canonical composition in
+    :func:`repro.solvers.reductions.loc_solve_mask` (shared with the
+    location-generic multigrid machinery).
+    """
+    return red.loc_solve_mask(grid, loc, dtype)
 
 
 def _mask_tree(grid, tree, mask_fn):

@@ -45,6 +45,24 @@ def _sd(nd: int, d: int, start, stop) -> tuple:
     return tuple(s)
 
 
+def _spacing(spacing, ndims: int):
+    """Normalize ``spacing`` to a per-dim tuple (scalars broadcast).
+
+    Under shape-uniform staggering every location shares the center
+    spacing — a face field's like-neighbors along its staggered dim are
+    one center spacing apart — so one tuple serves all locations; this
+    helper is the single place that contract lives.
+    """
+    try:
+        sp = tuple(float(s) for s in spacing)
+    except TypeError:
+        return (float(spacing),) * ndims
+    if len(sp) < ndims:
+        raise ValueError(f"spacing {spacing!r} has {len(sp)} entries "
+                         f"for a {ndims}-D grid")
+    return sp
+
+
 def diff_to_face(c, d: int, h: float = 1.0):
     """Center -> face-``d`` forward difference; dead plane zero."""
     nd = c.ndim
@@ -111,12 +129,16 @@ def to_center(f: Field) -> Field:
 
 
 def grad(p: Field, spacing) -> FieldSet:
-    """Center Field -> FieldSet of face-located components of its gradient."""
+    """Center Field -> FieldSet of face-located components of its gradient.
+
+    ``spacing`` is a per-dim tuple or a scalar (uniform grids).
+    """
     if p.loc != "center":
         raise ValueError(f"grad expects a center field, got {p.loc!r}")
+    sp = _spacing(spacing, p.grid.ndims)
     names = ("x", "y", "z")
     comps = {
-        names[d]: Field(p.grid, diff_to_face(p.data, d, spacing[d]),
+        names[d]: Field(p.grid, diff_to_face(p.data, d, sp[d]),
                         face_location(d))
         for d in range(p.grid.ndims)
     }
@@ -124,14 +146,24 @@ def grad(p: Field, spacing) -> FieldSet:
 
 
 def div(V: FieldSet, spacing) -> Field:
-    """FieldSet of face components -> center Field of the divergence."""
+    """FieldSet of face components -> center Field of the divergence.
+
+    Each component must be staggered along a DISTINCT dim (one flux per
+    direction); ``spacing`` is a per-dim tuple or a scalar.
+    """
     acc = None
     grid = None
+    seen: set = set()
     for f in V:
         sd = f.stagger_dim
         if sd is None:
             raise ValueError("div expects face-located components")
+        if sd in seen:
+            raise ValueError(
+                f"div got two components staggered along dim {sd}")
+        seen.add(sd)
         grid = f.grid
-        term = diff_to_center(f.data, sd, spacing[sd])
+        sp = _spacing(spacing, grid.ndims)
+        term = diff_to_center(f.data, sd, sp[sd])
         acc = term if acc is None else acc + term
     return Field(grid, acc, "center")

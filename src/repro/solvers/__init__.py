@@ -18,35 +18,51 @@ package provides that as a platform:
   (damped second-order dynamics) with device-side residual history.
 * :func:`multigrid_solve` — geometric V-cycles on the
   :meth:`ImplicitGlobalGrid.hierarchy` of coarsened grids, with
-  distributed full-weighting restriction and trilinear prolongation and
-  a choice of damped-Jacobi or 3-term Chebyshev smoothing.
+  distributed block-local transfers and a choice of damped-Jacobi or
+  3-term Chebyshev smoothing.  LOCATION-GENERIC: the transfers
+  (:mod:`repro.solvers.transfers`), smoother masks and operator follow
+  the staggering location of the unknown (center or any face), so face
+  fields get true staggered multigrid instead of a misaligned center
+  cycle; :func:`make_tree_v_cycle` extends this to COUPLED staggered
+  systems (e.g. the full-stress Stokes velocity block) smoothed as one
+  tuple with per-leaf transfers.
 * :class:`CyclePreconditioner` — the V-cycle as an SPD preconditioner
-  for ``cg`` (``apply_M``), set up once inside the compiled solve.
+  for ``cg`` (``apply_M``), set up once inside the compiled solve; each
+  residual leaf gets the cycle built for its location.
+* mixed precision — ``cg(..., dtype=jnp.float32)`` casts the whole
+  solve to f32 (stencil, halos, updates) while the masked reductions
+  keep their f64 accumulators, so stopping tests remain faithful.
 """
 
 from .reductions import (
     acc_dtype, dot, norm_l2, norm_linf, owned_mask, interior_mask, solve_mask,
+    loc_solve_mask,
     dot_g, norm_l2_g, norm_linf_g, field_min, field_max,
     field_min_g, field_max_g, tree_dot, tree_rhs_norm, masked_mean,
 )
 from .cg import cg, SolveInfo
 from .pseudo_transient import pseudo_transient, PTInfo, optimal_parameters
 from .multigrid import (
-    multigrid_solve, poisson_apply, poisson_diag,
+    multigrid_solve, poisson_apply, poisson_diag, face_stencil, face_diag,
     restrict_full_weighting, prolong_trilinear, coarsen_coefficient,
-    make_v_cycle, build_coefficients, level_spacings, SMOOTHERS,
+    make_v_cycle, make_tree_v_cycle, build_coefficients, level_spacings,
+    SMOOTHERS,
 )
 from .preconditioner import CyclePreconditioner
+from . import transfers
 
 __all__ = [
     "acc_dtype", "dot", "norm_l2", "norm_linf", "owned_mask", "interior_mask", "solve_mask",
+    "loc_solve_mask",
     "dot_g", "norm_l2_g", "norm_linf_g", "field_min", "field_max",
     "field_min_g", "field_max_g", "tree_dot", "tree_rhs_norm",
     "masked_mean",
     "cg", "SolveInfo",
     "pseudo_transient", "PTInfo", "optimal_parameters",
     "multigrid_solve", "poisson_apply", "poisson_diag",
+    "face_stencil", "face_diag",
     "restrict_full_weighting", "prolong_trilinear", "coarsen_coefficient",
-    "make_v_cycle", "build_coefficients", "level_spacings", "SMOOTHERS",
-    "CyclePreconditioner",
+    "make_v_cycle", "make_tree_v_cycle", "build_coefficients",
+    "level_spacings", "SMOOTHERS",
+    "CyclePreconditioner", "transfers",
 ]

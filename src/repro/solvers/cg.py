@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.grid import ImplicitGlobalGrid
+from repro.core.locations import is_field_node as _is_field_node
 from . import reductions as red
 
 
@@ -43,11 +44,6 @@ class SolveInfo:
     iterations: int
     relres: float
     converged: bool
-
-
-def _is_field_node(x) -> bool:
-    """A repro.fields Field, detected without importing the package."""
-    return getattr(x, "_staggered_tree", False) and hasattr(x, "loc")
 
 
 def _tmap(fn, *trees):
@@ -93,6 +89,7 @@ def cg(
     maxiter: int = 1000,
     apply_M: Callable | None = None,
     project_nullspace: str | None = None,
+    dtype=None,
     args=(),
 ):
     """Solve ``A x = b`` with (preconditioned) conjugate gradient.
@@ -124,12 +121,29 @@ def cg(
     shift-free Helmholtz operator annihilates constants, so CG must be
     kept on the mean-zero complement.
 
+    ``dtype`` selects the END-TO-END solve precision: every leaf of
+    ``b``/``x0`` (and of ``args``, so coefficient operands match) is
+    cast before the solve, making the whole Krylov loop — stencil, halo
+    exchange, vector updates — run at that precision, e.g.
+    ``jnp.float32`` for half the memory traffic per halo byte.  The
+    stopping test stays faithful regardless: the masked reductions of
+    :mod:`repro.solvers.reductions` accumulate in float64
+    (``acc_dtype``) and ``alpha``/``beta`` are computed from those f64
+    scalars before being cast back per leaf.  This is the
+    mixed-precision path: f32 fields, f64 accumulators.
+
     Returns ``(x, SolveInfo)``.
     """
     if project_nullspace not in (None, "constant"):
         raise ValueError(
             f"unknown project_nullspace {project_nullspace!r}; "
             "expected None or 'constant'")
+    if dtype is not None:
+        cast = lambda t: _tmap(lambda a: a.astype(dtype), t)  # noqa: E731
+        b = cast(b)
+        args = tuple(cast(a) for a in args)
+        if x0 is not None:
+            x0 = cast(x0)
     if x0 is None:
         x0 = _tmap(jnp.zeros_like, b)
 

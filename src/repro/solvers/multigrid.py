@@ -5,20 +5,26 @@ the SAME device mesh and Cartesian topology, halo width preserved, so the
 one ``update_halo`` works at every depth — only the local block shrinks
 (fine interior extent ``n - overlap`` halves per level).  With the
 blocks' interiors halving uniformly, the grid-transfer operators are
-block-local stencils followed by one halo exchange:
-
-* restriction — separable cell-centered full weighting, per-dim weights
-  ``[1/8, 3/8, 3/8, 1/8]`` over the two fine children and their outer
-  neighbors;
-* prolongation — separable cell-centered (tri)linear interpolation, each
-  fine child ``3/4`` its parent + ``1/4`` the adjacent coarse cell (the
-  transpose of restriction up to the standard ``2**ndims`` scaling).
+block-local stencils followed by one halo exchange — and the whole cycle
+is LOCATION-GENERIC: ``make_v_cycle(loc=...)`` smooths/transfers a field
+at any staggering location with the per-location transfer pairs of
+:mod:`repro.solvers.transfers` (cell-centered full weighting +
+(tri)linear prolongation on non-staggered dims; vertex-weighted
+transfers on the staggered dim of a face field, where coarse faces
+coincide with every other fine face), location-aware interior masks
+(pinned boundary faces and the dead plane stay zero at every level) and
+the matching operator — :func:`_poisson_stencil` at centers,
+:func:`face_stencil` on faces.  :func:`make_tree_v_cycle` extends this
+to COUPLED tuples of staggered components smoothed against one operator
+(the full-stress Stokes velocity block).
 
 The level mapping (derived from the stacked-block layout): coarse local
 cell ``i`` has fine children ``2i-1, 2i`` per dim (the cell-centered
-``I_f = 2 I_c`` coarsening), so children of owned coarse cells always
-live in the local fine block and its halo — restriction and prolongation
-need NO communication beyond the one halo update.
+``I_f = 2 I_c`` coarsening), while on a staggered dim coarse face ``i``
+coincides with fine face ``2i`` — either way the fine points a transfer
+reads always live in the local fine block and its halo, so restriction
+and prolongation need NO communication beyond the one halo update, at
+every location.
 
 Two smoothers are available on the flux-form variable-coefficient Poisson
 operator ``A u = -div(c grad u)`` (also exported here for the CG /
@@ -51,8 +57,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import hide as _hide
+from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
+from repro.stencil import mac as _mac
 from . import reductions as red
+from . import transfers
 from .cg import SolveInfo
 
 SMOOTHERS = ("jacobi", "chebyshev")
@@ -154,66 +163,49 @@ def poisson_diag(c, spacing):
 
 
 # ---------------------------------------------------------------------------
-# grid-transfer operators (local view; caller halo-updates the result)
+# staggered (face-located) flux-form operator (local view)
 # ---------------------------------------------------------------------------
 
-def _fw_1d(a, d: int):
-    """Per-dim cell-centered full weighting [1/8, 3/8, 3/8, 1/8]."""
-    nf = a.shape[d]
-    nd = a.ndim
-    return (
-        0.125 * a[_sd(nd, d, 0, nf - 3, 2)]
-        + 0.375 * a[_sd(nd, d, 1, nf - 2, 2)]
-        + 0.375 * a[_sd(nd, d, 2, nf - 1, 2)]
-        + 0.125 * a[_sd(nd, d, 3, nf, 2)]
-    )
+def face_stencil(u, c, spacing, sd: int):
+    """``-div(c grad u)`` for ``u`` staggered along ``sd``; ``c`` center.
 
+    Staggered coefficient placement: along the staggered dim the flux
+    between like faces ``i`` and ``i + 1`` sits at center ``i + 1``, so
+    the coefficient is the CENTER value; across dims the flux sits at an
+    edge, so it is the 4-point edge average.  Valid on the local
+    interior only — the caller multiplies by the location's interior
+    mask (which also keeps pinned boundary faces and the dead plane
+    zero).  The arithmetic is the canonical MAC spelling of
+    :mod:`repro.stencil.mac` — the same one the Stokes operator and
+    oracle use, so the face cycle smooths exactly the operator CG
+    iterates on.
+    """
+    return _mac.stripped_component(jnp, u, c, spacing, sd)
+
+
+def face_diag(c, spacing, sd: int):
+    """Diagonal of :func:`face_stencil` (full local shape, for Jacobi)."""
+    return _mac.stripped_diag_component(jnp, c, spacing, sd)
+
+
+# ---------------------------------------------------------------------------
+# grid-transfer operators (canonical per-location pairs in .transfers;
+# historical center-only names kept as the public aliases)
+# ---------------------------------------------------------------------------
 
 def restrict_full_weighting(fine):
-    """Fine residual -> coarse rhs; separable [1, 3, 3, 1]/8 weighting.
-
-    ``fine`` must be halo-consistent with a zero physical ring.  The
-    result has the coarse local shape with a zero ring (halo cells need a
-    subsequent ``update_halo``).
-    """
-    a = fine
-    for d in range(fine.ndim):
-        a = _fw_1d(a, d)
-    return jnp.pad(a, 1)
+    """Center restriction (see :func:`repro.solvers.transfers.restrict`)."""
+    return transfers.restrict(fine, "center")
 
 
 def prolong_trilinear(coarse):
-    """Coarse correction -> fine grid (separable linear interpolation).
-
-    Fine child ``2i-1`` gets ``3/4 c[i] + 1/4 c[i-1]``; child ``2i`` gets
-    ``3/4 c[i] + 1/4 c[i+1]``.  ``coarse`` must be halo-consistent (ring
-    zeros at the physical boundary).  Result has zero ring; halo-update
-    it before use.
-    """
-    a = coarse
-    for d in range(coarse.ndim):
-        nc = a.shape[d]
-        nd = a.ndim
-        mid = a[_sd(nd, d, 1, nc - 1)]
-        lower = 0.75 * mid + 0.25 * a[_sd(nd, d, 0, nc - 2)]
-        upper = 0.75 * mid + 0.25 * a[_sd(nd, d, 2, nc)]
-        pair = jnp.stack([lower, upper], axis=d + 1)
-        shape = list(pair.shape)
-        shape[d : d + 2] = [2 * (nc - 2)]
-        a = pair.reshape(shape)
-    return jnp.pad(a, 1)
+    """Center prolongation (see :func:`repro.solvers.transfers.prolong`)."""
+    return transfers.prolong(coarse, "center")
 
 
 def coarsen_coefficient(c):
-    """Coefficient field -> coarse level (full-weighted local average).
-
-    The physical ring is edge-replicated (nearest interior value); halo
-    cells need a subsequent ``update_halo``.
-    """
-    a = c
-    for d in range(c.ndim):
-        a = _fw_1d(a, d)
-    return jnp.pad(a, 1, mode="edge")
+    """Coefficient coarsening (see :mod:`repro.solvers.transfers`)."""
+    return transfers.coarsen_coefficient(c)
 
 
 # ---------------------------------------------------------------------------
@@ -252,9 +244,10 @@ _CHEB_UPPER = 2.0
 _CHEB_RATIO = 4.0
 
 
-def _cheb_rhos(degree: int) -> tuple[float, float, list[float]]:
+def _cheb_rhos(degree: int, upper: float = _CHEB_UPPER,
+               ratio: float = _CHEB_RATIO) -> tuple[float, float, list[float]]:
     """(theta, delta, [rho_1..rho_degree]) of the 3-term recurrence."""
-    a, b = _CHEB_UPPER / _CHEB_RATIO, _CHEB_UPPER
+    a, b = upper / ratio, upper
     theta, delta = (b + a) / 2.0, (b - a) / 2.0
     sigma1 = theta / delta
     rhos = [1.0 / sigma1]
@@ -269,6 +262,7 @@ def make_v_cycle(
     hs,
     cs,
     *,
+    loc: str = "center",
     shifts=None,
     nu_pre: int = 2,
     nu_post: int = 2,
@@ -279,13 +273,26 @@ def make_v_cycle(
     """Build ``(v_cycle, residual)`` local-view closures over a hierarchy.
 
     ``grids``/``hs``/``cs`` are the per-level grids, spacings
-    (:func:`level_spacings`) and halo-consistent coefficients
-    (:func:`build_coefficients`).  ``v_cycle(level, u, f)`` takes a
-    halo-consistent iterate and a zero-ring right-hand side;
-    ``residual(level, u, f)`` is ``f - A u`` with a zero ring.
+    (:func:`level_spacings`) and halo-consistent CENTER coefficients
+    (:func:`build_coefficients` — one coefficient hierarchy serves every
+    location).  ``v_cycle(level, u, f)`` takes a halo-consistent iterate
+    and a rhs that is zero outside the location's unknowns;
+    ``residual(level, u, f)`` is ``f - A u``, zero outside the unknowns.
 
-    ``shifts`` (optional) are per-level halo-consistent cell-centered
-    fields ``s >= 0`` turning the operator Helmholtz-like:
+    ``loc`` makes the WHOLE cycle location-generic: for a face location
+    the level operator is the staggered flux-form stencil
+    (:func:`face_stencil`: center coefficient along the staggered dim,
+    edge-averaged across), the smoother diagonal, residual and updates
+    are masked by the location's interior mask (pinned boundary faces
+    and the dead plane stay exactly zero at every level), and the
+    transfers are the per-location pairs of
+    :mod:`repro.solvers.transfers` — vertex-weighted along the staggered
+    dim, where coarse faces coincide with every other fine face.  Every
+    level still needs exactly one ``update_halo`` per transfer/sweep,
+    for every location.
+
+    ``shifts`` (optional, center only) are per-level halo-consistent
+    cell-centered fields ``s >= 0`` turning the operator Helmholtz-like:
     ``A u = s u - div(c grad u)`` — e.g. the ``1/dt + 1/eta`` shift of an
     implicit time step (:mod:`repro.apps.twophase_ops`).  Build them with
     :func:`build_coefficients` like the coefficients; the shift joins the
@@ -309,10 +316,12 @@ def make_v_cycle(
     """
     if smoother not in SMOOTHERS:
         raise ValueError(f"unknown smoother {smoother!r}; pick from {SMOOTHERS}")
+    sd = _loc.stagger_dim(loc)
+    if sd is not None and shifts is not None:
+        raise ValueError(
+            "Helmholtz shifts are only supported for the center cycle "
+            f"(got loc={loc!r})")
     nd = grid.ndims
-    dias = [poisson_diag(ck, hk) for ck, hk in zip(cs, hs)]
-    if shifts is not None:
-        dias = [dk + sk[_inner(nd)] for dk, sk in zip(dias, shifts)]
     # All-periodic + shift-free: every level's operator annihilates
     # constants.  The coarse rhs is kept mean-zero (wrap-aware masked
     # mean) so the coarse Jacobi sweeps cannot pump the nullspace mode —
@@ -320,23 +329,61 @@ def make_v_cycle(
     singular = shifts is None and all(grid.topo.periodic)
 
     def _demean(level, f):
-        m = red.solve_mask(grids[level], f.dtype)
-        mean = red.masked_mean(grids[level], f, m)
+        g = grids[level]
+        m = red.loc_solve_mask(g, loc, f.dtype)
+        mean = red.masked_mean(g, f, m)
         return f - mean.astype(f.dtype)
 
-    def residual(level, u, f):
-        """f - A u on the interior, zero ring (u halo-consistent)."""
-        Au = poisson_apply(grids[level], u, cs[level], hs[level],
-                           update_halo=False,
-                           shift=None if shifts is None else shifts[level])
-        r = f[_inner(nd)] - Au[_inner(nd)]
-        return jnp.zeros_like(u).at[_inner(nd)].set(r)
+    if sd is None:
+        # ---- center: interior-slab stencil, updates on the local
+        # interior (identical arithmetic to the original cycle) --------
+        dias = [poisson_diag(ck, hk) for ck, hk in zip(cs, hs)]
+        if shifts is not None:
+            dias = [dk + sk[_inner(nd)] for dk, sk in zip(dias, shifts)]
+
+        def residual(level, u, f):
+            """f - A u on the interior, zero ring (u halo-consistent)."""
+            Au = poisson_apply(grids[level], u, cs[level], hs[level],
+                               update_halo=False,
+                               shift=None if shifts is None else shifts[level])
+            r = f[_inner(nd)] - Au[_inner(nd)]
+            return jnp.zeros_like(u).at[_inner(nd)].set(r)
+
+        def add_scaled(level, u, r, scale):
+            return u.at[_inner(nd)].add(scale * r[_inner(nd)] / dias[level])
+
+        def precond_residual(level, u, f):
+            return residual(level, u, f)[_inner(nd)] / dias[level]
+
+        def add_corr(u, d):
+            return u.at[_inner(nd)].add(d)
+    else:
+        # ---- staggered: roll-form face stencil, everything masked by
+        # the per-level location interior mask (pinned faces + dead
+        # plane stay zero at every depth) ------------------------------
+        imasks = [_loc.interior_mask(g, loc, ck.dtype)
+                  for g, ck in zip(grids, cs)]
+        dias = [face_diag(ck, hk, sd) * mk + (1.0 - mk)   # safe to divide
+                for ck, hk, mk in zip(cs, hs, imasks)]
+
+        def residual(level, u, f):
+            """f - A u on the unknowns of ``loc``, zero elsewhere."""
+            Au = face_stencil(u, cs[level], hs[level], sd)
+            return (f - Au) * imasks[level]
+
+        def add_scaled(level, u, r, scale):
+            return u + scale * r / dias[level]
+
+        def precond_residual(level, u, f):
+            return residual(level, u, f) / dias[level]
+
+        def add_corr(u, d):
+            return u + d
 
     def jacobi(level, u, f, iters):
         def body(_, u):
             r = residual(level, u, f)
-            u = u.at[_inner(nd)].add(omega * r[_inner(nd)] / dias[level])
-            return grid.update_halo(u)
+            return grid.update_halo(add_scaled(level, u, r, omega))
 
         return jax.lax.fori_loop(0, iters, body, u)
 
@@ -344,16 +391,28 @@ def make_v_cycle(
         # 3-term recurrence on D^-1 A over [lam_max/4, lam_max]; the
         # rho_k are analytic constants — no reductions, fully unrolled.
         theta, delta, rhos = _cheb_rhos(degree)
-        z = residual(level, u, f)[_inner(nd)] / dias[level]
+        z = precond_residual(level, u, f)
         d = z / theta
-        u = grid.update_halo(u.at[_inner(nd)].add(d))
+        u = grid.update_halo(add_corr(u, d))
         for k in range(1, degree):
-            z = residual(level, u, f)[_inner(nd)] / dias[level]
+            z = precond_residual(level, u, f)
             d = (rhos[k] * rhos[k - 1]) * d + (2.0 * rhos[k] / delta) * z
-            u = grid.update_halo(u.at[_inner(nd)].add(d))
+            u = grid.update_halo(add_corr(u, d))
         return u
 
     smooth = jacobi if smoother == "jacobi" else chebyshev
+
+    def restrict_to(level, r):
+        fc = transfers.restrict(r, loc)
+        if sd is not None:
+            fc = fc * imasks[level]
+        return fc
+
+    def prolong_to(level, ec):
+        e = transfers.prolong(ec, loc)
+        if sd is not None:
+            e = e * imasks[level]
+        return e
 
     def v_cycle(level, u, f):
         if level == len(grids) - 1:
@@ -362,14 +421,130 @@ def make_v_cycle(
             return jacobi(level, u, f, coarse_sweeps)
         u = smooth(level, u, f, nu_pre)
         r = grid.update_halo(residual(level, u, f))
-        fc = grid.update_halo(restrict_full_weighting(r))
+        fc = grid.update_halo(restrict_to(level + 1, r))
         ec = v_cycle(
             level + 1,
             jnp.zeros(grids[level + 1].local_shape, u.dtype),
             fc,
         )
-        e = grid.update_halo(prolong_trilinear(ec))
+        e = grid.update_halo(prolong_to(level, ec))
         u = u + e
+        return smooth(level, u, f, nu_post)
+
+    return v_cycle, residual
+
+
+def make_tree_v_cycle(
+    grid: ImplicitGlobalGrid,
+    grids,
+    locs,
+    apply_level,
+    diag_level,
+    *,
+    nu_pre: int = 1,
+    nu_post: int = 1,
+    omega: float = 0.6,
+    coarse_sweeps: int = 50,
+    smoother: str = "jacobi",
+    cheb_upper: float = 3.0,
+):
+    """V-cycle over a TUPLE of staggered components coupled by ONE operator.
+
+    The scalar :func:`make_v_cycle` smooths each unknown field against
+    its own operator; systems whose components couple through the
+    operator itself — the full-stress Stokes velocity block, where the
+    symmetric-gradient shear ties ``vx``/``vy``/``vz`` together — need
+    the cycle to smooth and transfer the WHOLE tuple at once, each leaf
+    on its own staggered grid.  That is what this builds:
+
+    * ``locs`` — per-leaf staggering locations (e.g.
+      ``("xface", "yface", "zface")``), fixing each leaf's transfers
+      (:mod:`repro.solvers.transfers`) and interior masks at every level;
+    * ``apply_level(level, u_tuple) -> tuple`` — the coupled operator on
+      halo-consistent leaves, raw/unmasked (the cycle masks);
+    * ``diag_level(level) -> tuple`` — full-shape positive per-leaf
+      diagonals of that operator (coupling terms never touch a leaf's
+      own diagonal, so pointwise Jacobi remains symmetric).
+
+    Smoothing is damped block-pointwise Jacobi or the 3-term Chebyshev
+    recurrence on ``D^-1 A``; for a coupled operator the Gershgorin
+    row-sum includes the cross-component entries, so the analytic bound
+    is ``cheb_upper`` (= 3 for the full-stress block: the coupling adds
+    at most one extra diagonal's worth of row sum) and the default
+    Jacobi damping is lowered to ``omega = 0.6 < 2/3`` accordingly.
+
+    Per level and sweep/transfer there is still exactly ONE halo
+    exchange — of all leaves together (`update_halo` batches them).
+    Restriction/prolongation are per-leaf, so ``P = 2**ndims R^T`` holds
+    leaf-wise and the cycle with ``nu_pre == nu_post`` is a symmetric
+    preconditioner for tree-CG over the same FieldSet.
+
+    Returns ``(v_cycle, residual)``; both take and return tuples of raw
+    local arrays (callers wrap/unwrap their FieldSet leaves).
+    """
+    if smoother not in SMOOTHERS:
+        raise ValueError(f"unknown smoother {smoother!r}; pick from {SMOOTHERS}")
+    locs = tuple(locs)
+    imasks = [
+        tuple(_loc.interior_mask(g, loc, grid.dtype) for loc in locs)
+        for g in grids
+    ]
+    dias = [
+        tuple(dk * mk + (1.0 - mk)          # safe to divide everywhere
+              for dk, mk in zip(diag_level(level), imasks[level]))
+        for level in range(len(grids))
+    ]
+
+    def _halo(u):
+        out = grid.update_halo(*u)
+        return out if isinstance(out, tuple) else (out,)
+
+    def residual(level, u, f):
+        """f - A u on each leaf's unknowns, zero elsewhere."""
+        Au = apply_level(level, u)
+        return tuple((fi - ai) * mi
+                     for fi, ai, mi in zip(f, Au, imasks[level]))
+
+    def jacobi(level, u, f, iters):
+        def body(_, u):
+            r = residual(level, u, f)
+            return _halo(tuple(
+                ui + omega * ri / di
+                for ui, ri, di in zip(u, r, dias[level])))
+
+        return jax.lax.fori_loop(0, iters, body, u)
+
+    def chebyshev(level, u, f, degree):
+        theta, delta, rhos = _cheb_rhos(degree, upper=cheb_upper)
+        z = tuple(ri / di
+                  for ri, di in zip(residual(level, u, f), dias[level]))
+        d = tuple(zi / theta for zi in z)
+        u = _halo(tuple(ui + di for ui, di in zip(u, d)))
+        for k in range(1, degree):
+            z = tuple(ri / di
+                      for ri, di in zip(residual(level, u, f), dias[level]))
+            d = tuple((rhos[k] * rhos[k - 1]) * di + (2.0 * rhos[k] / delta) * zi
+                      for di, zi in zip(d, z))
+            u = _halo(tuple(ui + di for ui, di in zip(u, d)))
+        return u
+
+    smooth = jacobi if smoother == "jacobi" else chebyshev
+
+    def v_cycle(level, u, f):
+        if level == len(grids) - 1:
+            return jacobi(level, u, f, coarse_sweeps)
+        u = smooth(level, u, f, nu_pre)
+        r = _halo(residual(level, u, f))
+        fc = _halo(tuple(
+            transfers.restrict(ri, loc) * mi
+            for ri, loc, mi in zip(r, locs, imasks[level + 1])))
+        zeros = tuple(
+            jnp.zeros(grids[level + 1].local_shape, ui.dtype) for ui in u)
+        ec = v_cycle(level + 1, zeros, fc)
+        e = _halo(tuple(
+            transfers.prolong(eci, loc) * mi
+            for eci, loc, mi in zip(ec, locs, imasks[level])))
+        u = tuple(ui + ei for ui, ei in zip(u, e))
         return smooth(level, u, f, nu_post)
 
     return v_cycle, residual
@@ -386,6 +561,7 @@ def multigrid_solve(
     spacing,
     x0=None,
     *,
+    loc: str | None = None,
     tol: float = 1e-6,
     maxiter: int = 100,
     nu_pre: int = 2,
@@ -395,24 +571,39 @@ def multigrid_solve(
     max_levels: int | None = None,
     smoother: str = "jacobi",
 ):
-    """Solve ``-div(c grad x) = b`` by V-cycles.
+    """Solve ``-div(c grad x) = b`` by V-cycles, at any staggering location.
+
+    ``b``/``x0`` may be raw center arrays (the original contract) or
+    ``repro.fields.Field``s at any location — a face-located ``b`` gets
+    the staggered operator/transfers/masks of
+    ``make_v_cycle(loc=...)`` and a Field of the same location back.
+    ``loc`` overrides the location for raw arrays; ``c`` is always the
+    CENTER coefficient (a Field or raw array).
 
     Boundary conditions per dim follow ``grid.topo.periodic``:
-    homogeneous Dirichlet on non-periodic dims (the ring holds the BC),
-    wraparound on periodic dims (the halo exchange maintains the ring
-    duplicates).  With EVERY dim periodic the operator is singular; the
-    rhs is projected onto mean-zero and the mean-zero representative of
-    the solution is returned.  ``c``/``b`` are host-level grid fields;
-    convergence is the deduplicated global relative residual on the FINE
-    level, so the solution matches a single-device solve regardless of
-    how crude the coarse-level operators are.  ``smoother`` picks damped
-    Jacobi or the 3-term Chebyshev smoother for the pre/post sweeps.
+    homogeneous Dirichlet on non-periodic dims (the ring holds the BC;
+    for the staggered dim of a face field the pinned planes are the
+    boundary faces and the dead plane), wraparound on periodic dims (the
+    halo exchange maintains the ring duplicates).  With EVERY dim
+    periodic the operator is singular; the rhs is projected onto
+    mean-zero and the mean-zero representative of the solution is
+    returned.  Convergence is the deduplicated global relative residual
+    over the location's unknowns on the FINE level, so the solution
+    matches a single-device solve regardless of how crude the
+    coarse-level operators are.  ``smoother`` picks damped Jacobi or the
+    3-term Chebyshev smoother for the pre/post sweeps.
     Returns ``(x, SolveInfo)``.
     """
     if grid.halo != 1:
         raise ValueError("multigrid assumes halo width 1 (overlap=2)")
     if smoother not in SMOOTHERS:
         raise ValueError(f"unknown smoother {smoother!r}; pick from {SMOOTHERS}")
+    loc = _loc.loc_of(b) if loc is None else loc
+    wrap = None
+    if hasattr(b, "with_data"):
+        wrap, b = b.with_data, b.data
+    c = _loc.data_of(c)
+    x0 = _loc.data_of(x0) if x0 is not None else None
     grids = grid.hierarchy(max_levels=max_levels)
     if len(grids) < 2:
         raise ValueError(
@@ -428,10 +619,10 @@ def multigrid_solve(
     def _local(b, c, x):
         cs = build_coefficients(grid, grids, c)
         v_cycle, residual = make_v_cycle(
-            grid, grids, hs, cs, nu_pre=nu_pre, nu_post=nu_post,
+            grid, grids, hs, cs, loc=loc, nu_pre=nu_pre, nu_post=nu_post,
             omega=omega, coarse_sweeps=coarse_sweeps, smoother=smoother,
         )
-        mask = red.solve_mask(grid, b.dtype)
+        mask = red.loc_solve_mask(grid, loc, b.dtype)
 
         def demean(a):
             # operator is singular: keep rhs and iterate on the
@@ -463,7 +654,7 @@ def multigrid_solve(
             x = grid.update_halo(demean(x))
         return x, k, res / bnorm
 
-    key = ("solvers.mg", tol, maxiter, nu_pre, nu_post, omega,
+    key = ("solvers.mg", loc, tol, maxiter, nu_pre, nu_post, omega,
            coarse_sweeps, max_levels, smoother, spacing, b.shape, b.dtype)
     if key not in grid._jit_cache:
         sm = jax.shard_map(
@@ -475,4 +666,6 @@ def multigrid_solve(
         grid._jit_cache[key] = jax.jit(sm)
     x, k, relres = grid._jit_cache[key](b, c, x0)
     k, relres = int(k), float(relres)
+    if wrap is not None:
+        x = wrap(x)
     return x, SolveInfo(iterations=k, relres=relres, converged=relres <= tol)

@@ -17,15 +17,22 @@ MG-preconditioned solve stays one ``lax.while_loop`` under one
 SPD-ness (required by CG): the V-cycle with equal pre/post smoothing
 sweeps is symmetric — the smoothers are symmetric (damped Jacobi; a fixed
 Chebyshev polynomial in ``D^-1 A``), prolongation is the transpose of
-restriction up to the standard ``2**ndims`` scaling, and the coarse solve
-is a fixed number of Jacobi sweeps — and positive definite when it is a
-contraction, which the analytic smoothing bounds guarantee here.
+restriction up to the standard ``2**ndims`` scaling AT EVERY LOCATION
+(:mod:`repro.solvers.transfers`), and the coarse solve is a fixed number
+of Jacobi sweeps — and positive definite when it is a contraction, which
+the analytic smoothing bounds guarantee here.
 
-The preconditioner maps each LEAF of the residual pytree through the same
-scalar cycle: for a staggered system (e.g. the three face-located Stokes
-velocity components) every component is preconditioned by the
-cell-centered variable-coefficient cycle — spectrally equivalent to the
-face operators, which is all a preconditioner needs.
+The preconditioner maps each LEAF of the residual pytree through the
+cycle built FOR ITS LOCATION: a ``repro.fields.Field`` leaf at ``xface``
+gets the x-face cycle (staggered operator, vertex transfers along x,
+face masks), a center leaf or bare array the cell-centered cycle.  For a
+staggered system (e.g. the three face-located Stokes velocity
+components) this is the ROADMAP's "staggered multigrid": each component
+is smoothed and transferred on ITS OWN grid, instead of pretending the
+faces are centers — the half-cell transfer misalignment of the center
+cycle is what costs it resolution-independence
+(``per_location=False`` keeps the old behavior for A/B comparisons;
+``tests/test_convergence_regression.py`` pins the gap).
 """
 
 from __future__ import annotations
@@ -33,7 +40,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
+from repro.core.locations import is_field_node as _is_field_node
 from .multigrid import (
     SMOOTHERS, build_coefficients, level_spacings, make_v_cycle,
 )
@@ -47,6 +56,14 @@ class CyclePreconditioner:
     ``setup`` receives the same local-view operands as ``apply_A`` and
     binds the first one as the coefficient (a ``repro.fields.Field`` or a
     raw center array).
+
+    Each residual leaf is preconditioned by the cycle built for its
+    staggering location (see the module docstring); cycles are built
+    lazily per location encountered, all sharing the one center
+    coefficient hierarchy.  ``per_location=False`` forces the
+    cell-centered cycle onto every leaf (the pre-staggered-multigrid
+    behavior — faces preconditioned by the spectrally-equivalent but
+    misaligned center cycle).
 
     ``helmholtz_shift=True`` additionally binds the SECOND operator arg
     as a cell-centered diagonal shift ``s``, so the cycle targets the
@@ -76,6 +93,7 @@ class CyclePreconditioner:
         max_levels: int | None = None,
         smoother: str = "jacobi",
         helmholtz_shift: bool = False,
+        per_location: bool = True,
     ):
         if grid.halo != 1:
             raise ValueError("multigrid assumes halo width 1 (overlap=2)")
@@ -93,12 +111,13 @@ class CyclePreconditioner:
         self.hs = level_spacings(grid, self.grids, spacing)
         self.ncycles = int(ncycles)
         self.helmholtz_shift = bool(helmholtz_shift)
+        self.per_location = bool(per_location)
         self.kw = dict(nu_pre=nu_pre, nu_post=nu_post, omega=omega,
                        coarse_sweeps=coarse_sweeps, smoother=smoother)
 
     def setup(self, c, *rest):
         """Build ``M`` from the local-view operands (once per solve)."""
-        c = getattr(c, "data", c)  # accept a repro.fields Field
+        c = _loc.data_of(c)  # accept a repro.fields Field
         cs = build_coefficients(self.grid, self.grids, c)
         shifts = None
         if self.helmholtz_shift:
@@ -107,17 +126,29 @@ class CyclePreconditioner:
                     "helmholtz_shift=True needs the shift field as the "
                     "second operator arg (args=(c, shift, ...))")
             shifts = build_coefficients(
-                self.grid, self.grids, getattr(rest[0], "data", rest[0]))
-        v_cycle, _ = make_v_cycle(self.grid, self.grids, self.hs, cs,
-                                  shifts=shifts, **self.kw)
+                self.grid, self.grids, _loc.data_of(rest[0]))
+
+        cycles: dict = {}
+
+        def cycle_for(loc):
+            if loc not in cycles:
+                cycles[loc] = make_v_cycle(
+                    self.grid, self.grids, self.hs, cs, loc=loc,
+                    shifts=shifts, **self.kw)[0]
+            return cycles[loc]
 
         def M(r):
-            def one(leaf):
+            def one(node):
+                loc = _loc.loc_of(node) if self.per_location else "center"
+                v_cycle = cycle_for(loc)
+                leaf = _loc.data_of(node)
                 e = jnp.zeros_like(leaf)
                 for _ in range(self.ncycles):
                     e = v_cycle(0, e, leaf)
+                if _is_field_node(node):
+                    return node.with_data(e)
                 return e
 
-            return jax.tree_util.tree_map(one, r)
+            return jax.tree_util.tree_map(one, r, is_leaf=_is_field_node)
 
         return M

@@ -31,6 +31,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
 from repro.core.topology import CartesianTopology
 
@@ -125,6 +126,17 @@ def solve_mask(grid: ImplicitGlobalGrid, dtype=None):
     owned cells minus Dirichlet-pinned planes (non-periodic dims) and
     ring-duplicated planes (periodic dims)."""
     return owned_mask(grid, dtype) * interior_mask(grid, dtype=dtype)
+
+
+def loc_solve_mask(grid: ImplicitGlobalGrid, loc: str, dtype=None):
+    """Location-aware :func:`solve_mask`: each unknown of a field at
+    ``loc`` counted exactly once — ownership (location-independent under
+    shape-uniform staggering) intersected with the location's validity
+    and unknown masks from :mod:`repro.core.locations`.  The single
+    composition point shared by the location-generic multigrid and the
+    ``repro.fields`` mask API."""
+    return owned_mask(grid, dtype) * _loc.valid_mask(grid, loc, dtype) \
+        * _loc.interior_mask(grid, loc, dtype)
 
 
 def masked_mean(grid: ImplicitGlobalGrid, a, mask):

@@ -1,0 +1,171 @@
+"""Location-generic multigrid grid-transfer operators (local view).
+
+One restriction/prolongation pair per staggering location, built from
+separable per-dim passes.  The index geometry under the 2:1 coarsening of
+:meth:`ImplicitGlobalGrid.coarsen` differs by staggering:
+
+* **center dims** (a non-staggered dim of any field): coarse cell ``i``
+  has fine children ``2i - 1, 2i`` (cell-centered coarsening; the coarse
+  cell center falls midway between its children), so restriction is the
+  cell-centered full weighting ``[1/8, 3/8, 3/8, 1/8]`` over children and
+  outer neighbors, and prolongation the (tri)linear ``3/4``/``1/4``
+  split;
+* **the staggered dim of a face field**: coarse face ``i`` (between
+  coarse centers ``i`` and ``i + 1``) lands EXACTLY on fine face ``2i``
+  (faces coarsen vertex-like), so restriction is the vertex full
+  weighting ``[1/4, 1/2, 1/4]`` over ``{2i-1, 2i, 2i+1}`` and
+  prolongation the vertex linear interpolation — copy at coincident
+  faces (``2i <- i``), average at in-between faces
+  (``2i+1 <- (i + i+1)/2``).
+
+Both pairs satisfy ``P = 2 R^T`` per dim (so ``P = 2**ndims R^T``
+overall, the standard Galerkin-compatible scaling), which is what keeps
+the V-cycle a symmetric preconditioner for CG at every location — the
+hypothesis adjointness property in ``tests/test_property.py`` pins this
+per location.
+
+Locality: children (resp. coincident/flanking fine faces) of owned
+coarse points always live in the local fine block plus its one-cell
+halo, for every location — the staggered reads reach at most local index
+``n - 1`` (the last halo plane; on the last rank the dead plane, whose
+zero is masked out by the caller's location-aware interior mask).  So
+every transfer stays block-local and needs exactly one ``update_halo``
+on its result, exactly like the center transfers the cycle started with.
+
+All functions take and return RAW local arrays with a zero ring (pad 1);
+callers mask to the location's unknowns and halo-update.  Wrappers
+keeping the historical center-only names live in
+:mod:`repro.solvers.multigrid`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.locations import stagger_dim
+
+
+def _sd(nd: int, d: int, start, stop, step=None) -> tuple:
+    """Slice dim ``d`` only; other dims stay full (separable passes)."""
+    s: list = [slice(None)] * nd
+    s[d] = slice(start, stop, step)
+    return tuple(s)
+
+
+# ---------------------------------------------------------------------------
+# restriction
+# ---------------------------------------------------------------------------
+
+def _restrict_center_1d(a, d: int):
+    """Cell-centered full weighting [1/8, 3/8, 3/8, 1/8] along ``d``."""
+    nf = a.shape[d]
+    nd = a.ndim
+    return (
+        0.125 * a[_sd(nd, d, 0, nf - 3, 2)]
+        + 0.375 * a[_sd(nd, d, 1, nf - 2, 2)]
+        + 0.375 * a[_sd(nd, d, 2, nf - 1, 2)]
+        + 0.125 * a[_sd(nd, d, 3, nf, 2)]
+    )
+
+
+def _restrict_face_1d(a, d: int):
+    """Vertex full weighting [1/4, 1/2, 1/4] along the staggered ``d``.
+
+    Coarse face ``i`` coincides with fine face ``2i``; the flanking reads
+    ``2i +- 1`` reach local index ``n - 1`` at most (halo/dead plane).
+    """
+    nf = a.shape[d]
+    nd = a.ndim
+    return (
+        0.25 * a[_sd(nd, d, 1, nf - 2, 2)]
+        + 0.50 * a[_sd(nd, d, 2, nf - 1, 2)]
+        + 0.25 * a[_sd(nd, d, 3, nf, 2)]
+    )
+
+
+def restrict(fine, loc: str = "center"):
+    """Fine residual -> coarse rhs for a field at ``loc``.
+
+    ``fine`` must be halo-consistent with zeros outside its unknowns.
+    The result has the coarse local shape with a zero ring; mask it to
+    the coarse location's unknowns and ``update_halo`` before use.
+    """
+    sd = stagger_dim(loc)
+    a = fine
+    for d in range(fine.ndim):
+        a = _restrict_face_1d(a, d) if d == sd else _restrict_center_1d(a, d)
+    return jnp.pad(a, 1)
+
+
+# ---------------------------------------------------------------------------
+# prolongation
+# ---------------------------------------------------------------------------
+
+def _prolong_center_1d(a, d: int):
+    """Cell-centered linear interpolation along ``d`` (3/4, 1/4 pairs)."""
+    nc = a.shape[d]
+    nd = a.ndim
+    mid = a[_sd(nd, d, 1, nc - 1)]
+    lower = 0.75 * mid + 0.25 * a[_sd(nd, d, 0, nc - 2)]
+    upper = 0.75 * mid + 0.25 * a[_sd(nd, d, 2, nc)]
+    pair = jnp.stack([lower, upper], axis=d + 1)
+    shape = list(pair.shape)
+    shape[d : d + 2] = [2 * (nc - 2)]
+    return pair.reshape(shape)
+
+
+def _prolong_face_1d(a, d: int):
+    """Vertex linear interpolation along the staggered ``d``.
+
+    Fine face ``2i`` copies its coincident coarse face ``i``; fine face
+    ``2i + 1`` averages coarse faces ``i`` and ``i + 1``.  The output
+    covers the fine interior ``1 .. n_f - 2``: the leading in-between
+    face ``1`` averages the (boundary) coarse face ``0`` with face ``1``,
+    and the trailing in-between slot ``n_f - 1`` is dropped (a halo/dead
+    plane, refreshed by the caller's ``update_halo``).
+    """
+    nc = a.shape[d]
+    nd = a.ndim
+    mid = a[_sd(nd, d, 1, nc - 1)]                      # c[i], i = 1..nc-2
+    nxt = a[_sd(nd, d, 2, nc)]                          # c[i+1]
+    odd = 0.5 * (mid + nxt)                             # fine 2i+1
+    pair = jnp.stack([mid, odd], axis=d + 1)            # fine 2..n_f-1
+    shape = list(pair.shape)
+    shape[d : d + 2] = [2 * (nc - 2)]
+    pair = pair.reshape(shape)
+    first = 0.5 * (a[_sd(nd, d, 0, 1)] + a[_sd(nd, d, 1, 2)])   # fine 1
+    return jnp.concatenate(
+        [first, pair[_sd(nd, d, 0, shape[d] - 1)]], axis=d)
+
+
+def prolong(coarse, loc: str = "center"):
+    """Coarse correction -> fine grid for a field at ``loc``.
+
+    ``coarse`` must be halo-consistent with zeros outside its unknowns
+    (ring zeros at the physical boundary, zero pinned faces / dead plane
+    for staggered locations).  Result has a zero ring; mask to the fine
+    location's unknowns and ``update_halo`` before use.
+    """
+    sd = stagger_dim(loc)
+    a = coarse
+    for d in range(coarse.ndim):
+        a = _prolong_face_1d(a, d) if d == sd else _prolong_center_1d(a, d)
+    return jnp.pad(a, 1)
+
+
+# ---------------------------------------------------------------------------
+# coefficient coarsening (coefficients are always center-located)
+# ---------------------------------------------------------------------------
+
+def coarsen_coefficient(c):
+    """Center coefficient field -> coarse level (full-weighted average).
+
+    The physical ring is edge-replicated (nearest interior value); halo
+    cells need a subsequent ``update_halo``.  Face-located cycles derive
+    their own-dim and edge-averaged coefficients from this same center
+    hierarchy, so every location shares one coefficient coarsening.
+    """
+    a = c
+    for d in range(c.ndim):
+        a = _restrict_center_1d(a, d)
+    return jnp.pad(a, 1, mode="edge")

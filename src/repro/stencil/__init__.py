@@ -1,5 +1,5 @@
 """Finite-difference operators on regular staggered grids (ParallelStencil analogue)."""
 
-from . import fd2d, fd3d
+from . import fd2d, fd3d, mac
 
-__all__ = ["fd2d", "fd3d"]
+__all__ = ["fd2d", "fd3d", "mac"]

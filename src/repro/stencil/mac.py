@@ -1,0 +1,162 @@
+"""Staggered (MAC) viscous-block stencils, parameterized by array module.
+
+The canonical — and only — spelling of the staggered variable-viscosity
+operator arithmetic, shared by three consumers that must never drift
+apart:
+
+* the Stokes DEVICE operator (:mod:`repro.apps.stokes`, ``xp = jnp``
+  inside ``shard_map``),
+* the Stokes NumPy ORACLE (same module, ``xp = numpy`` on the gathered
+  global arrays),
+* the location-generic multigrid smoother
+  (:mod:`repro.solvers.multigrid`: ``face_stencil``/``face_diag`` bind
+  the per-component forms with ``xp = jnp``) — the face V-cycle smooths
+  the very operator CG iterates on.
+
+It lives in :mod:`repro.stencil` (no dependencies beyond the array
+module passed in) so both the solvers layer and the apps layer can
+import it without cycles; :mod:`repro.apps._stencil_np` re-exports it
+under the historical name.
+
+Geometry (shape-uniform MAC staggering of :mod:`repro.fields`): velocity
+component ``d`` lives on ``d``-faces (entry ``i`` along ``d`` at
+``i + 1/2``), viscosity ``eta`` at centers.  All stencils are roll-form:
+value at index ``i`` reads ``i + s`` via ``roll(a, d, s)``; wrapped
+planes land only on ring/halo/dead cells, which every caller masks or
+refreshes — interior outputs never read a wrapped value (reads reach at
+most one cell in each direction, within the halo).
+"""
+
+from __future__ import annotations
+
+
+def roll(xp, a, d: int, s: int):
+    """Value at index ``i`` becomes ``a[i + s]`` along dim ``d``."""
+    return xp.roll(a, -s, axis=d)
+
+
+def edge_avg(xp, c, d1: int, d2: int):
+    """Center field -> 4-point average at the (d1, d2) edges.
+
+    Entry ``[i, j]`` is the edge ``(i + 1/2, j + 1/2)`` — where the
+    shear stress ``tau_{d1 d2}`` and its viscosity live.
+    """
+    a = c + roll(xp, c, d1, +1)
+    return 0.25 * (a + roll(xp, a, d2, +1))
+
+
+# ---------------------------------------------------------------------------
+# stripped (decoupled) viscous block: -div(eta grad v_d) per component
+# ---------------------------------------------------------------------------
+
+def stripped_component(xp, u, eta, spacing, d: int):
+    """``-div(eta grad u)`` for ``u`` staggered along ``d``.
+
+    Coefficient placement: CENTER ``eta`` along the component's own dim
+    (the flux between like faces ``i`` and ``i + 1`` sits at center
+    ``i + 1``), 4-point EDGE average across dims.  Unmasked; callers
+    zero everything outside the component's unknown faces.
+    """
+    nd = u.ndim
+    h2 = [float(s) ** 2 for s in spacing]
+    acc = xp.zeros_like(u)
+    for dd in range(nd):
+        if dd == d:
+            ep = roll(xp, eta, d, +1)
+            acc = acc + (ep * (roll(xp, u, d, +1) - u)
+                         - eta * (u - roll(xp, u, d, -1))) / h2[d]
+        else:
+            ee = edge_avg(xp, eta, d, dd)
+            acc = acc + (ee * (roll(xp, u, dd, +1) - u)
+                         - roll(xp, ee, dd, -1)
+                         * (u - roll(xp, u, dd, -1))) / h2[dd]
+    return -acc
+
+
+def stripped_diag_component(xp, eta, spacing, d: int):
+    """Diagonal of :func:`stripped_component` (full shape, for Jacobi)."""
+    nd = eta.ndim
+    h2 = [float(s) ** 2 for s in spacing]
+    dia = xp.zeros_like(eta)
+    for dd in range(nd):
+        if dd == d:
+            dia = dia + (eta + roll(xp, eta, d, +1)) / h2[d]
+        else:
+            ee = edge_avg(xp, eta, d, dd)
+            dia = dia + (ee + roll(xp, ee, dd, -1)) / h2[dd]
+    return dia
+
+
+def stripped_apply(xp, V, eta, spacing):
+    """Per-component viscous block over the 3-sequence ``V`` (no
+    coupling); see :func:`stripped_component`."""
+    return [stripped_component(xp, V[d], eta, spacing, d)
+            for d in range(len(V))]
+
+
+def stripped_diag(xp, eta, spacing):
+    """Per-component diagonals of :func:`stripped_apply`."""
+    return [stripped_diag_component(xp, eta, spacing, d)
+            for d in range(eta.ndim)]
+
+
+# ---------------------------------------------------------------------------
+# full symmetric-gradient stress: -div(2 eta D(V)) per component
+# ---------------------------------------------------------------------------
+
+def full_stress_apply(xp, V, eta, spacing):
+    """Full-stress momentum operator ``-div(2 eta D(V))`` per component.
+
+    ``D(V) = (grad V + grad V^T) / 2``; component ``d`` of the result is
+
+        -[ d_d(2 eta d_d v_d) + sum_{dd != d} d_dd( eta_e (d_dd v_d + d_d v_dd) ) ]
+
+    with the normal stress on centers (CENTER ``eta``) and the shear
+    stress ``tau_{d,dd}`` on the (d, dd) edges (EDGE-averaged ``eta``);
+    the ``d_d v_dd`` term is the symmetric-gradient component coupling
+    the stripped block drops.  Returns the 3 unmasked result arrays;
+    callers zero everything outside each component's unknown faces.
+    """
+    nd = len(V)
+    h = [float(s) for s in spacing]
+    out = []
+    for d in range(nd):
+        u = V[d]
+        acc = xp.zeros_like(u)
+        for dd in range(nd):
+            if dd == d:
+                ep = roll(xp, eta, d, +1)
+                acc = acc + 2.0 * (ep * (roll(xp, u, d, +1) - u)
+                                   - eta * (u - roll(xp, u, d, -1))) \
+                    / (h[d] * h[d])
+            else:
+                ee = edge_avg(xp, eta, d, dd)
+                # tau_{d,dd}[i, j] at edge (i+1/2, j+1/2): the shear rate
+                # pairs d_dd v_d with the coupling term d_d v_dd.
+                tau = ee * ((roll(xp, u, dd, +1) - u) / h[dd]
+                            + (roll(xp, V[dd], d, +1) - V[dd]) / h[d])
+                acc = acc + (tau - roll(xp, tau, dd, -1)) / h[dd]
+        out.append(-acc)
+    return out
+
+
+def full_stress_diag(xp, eta, spacing):
+    """Per-component diagonal of :func:`full_stress_apply` (for Jacobi).
+
+    The coupling term ``d_d v_dd`` never touches component ``d``'s own
+    diagonal, so the diagonal is the stripped one with the own-dim
+    coefficient doubled.
+    """
+    nd = eta.ndim
+    h2 = [float(s) ** 2 for s in spacing]
+    out = []
+    for d in range(nd):
+        dia = xp.zeros_like(eta)
+        for dd in range(nd):
+            if dd == d:
+                dia = dia + 2.0 * (eta + roll(xp, eta, d, +1)) / h2[d]
+            else:
+                ee = edge_avg(xp, eta, d, dd)
+                dia = dia + (ee + roll(xp, ee, dd, -1)) / h2[dd]
+        out.append(dia)
+    return out

@@ -8,7 +8,12 @@ headroom) at fixed sizes so such regressions fail loudly.
 Recorded baselines (f64, 8 fake CPU ranks, dims=(2,2,2)):
 
 * Poisson 18^3 global (nx=10 local):      cg 54, mgcg 12
-* Stokes velocity block 14^3 (nx=8):      cg 55, mgcg 12
+* Stokes full-stress velocity block 14^3 (nx=8): cg 77, staggered mgcg 7
+* Stokes full-stress velocity block 34^3 (nx=18): staggered (coupled
+  tree-cycle) mgcg 9 vs center-cycle baseline 23 — the staggered
+  transfers must stay at <= HALF the center cycle's iterations
+* Stokes full solve 14^3 (tol 1e-6 on ||div V||): Schur-CG 10 outer
+  velocity solves vs Uzawa 52 — Schur-CG must stay <= 1/3 of Uzawa
 * Two-phase implicit pressure @ 10x dt_limit (30x22x22): cg 9/step,
   mgcg (Helmholtz-shifted cycle) 5/step
 * All-periodic Poisson 18^3 (nullspace-projected): cg 26, mgcg 10
@@ -87,16 +92,71 @@ jax.config.update("jax_enable_x64", True)
 from repro.apps.stokes import Stokes3D
 
 app = Stokes3D(nx=8, ny=8, nz=8, dims=(2, 2, 2))
-_, cg = app.velocity_solve(precond=False, tol=1e-8)
-_, mgcg = app.velocity_solve(precond=True, tol=1e-8)
-print("stokes velocity cg", cg.iterations, "mgcg", mgcg.iterations)
-assert cg.converged and mgcg.converged
-assert cg.iterations <= 77, cg.iterations        # recorded 55
-assert mgcg.iterations <= 17, mgcg.iterations    # recorded 12
+_, cg = app.velocity_solve(precond=None, tol=1e-8)
+_, mgcg = app.velocity_solve(precond="stress", tol=1e-8)
+_, face = app.velocity_solve(precond="face", tol=1e-8)
+print("stokes velocity cg", cg.iterations, "staggered mgcg",
+      mgcg.iterations, "per-leaf face cycles", face.iterations)
+assert cg.converged and mgcg.converged and face.converged
+assert cg.iterations <= 105, cg.iterations       # recorded 77
+assert mgcg.iterations <= 10, mgcg.iterations    # recorded 7
+assert face.iterations <= 24, face.iterations    # recorded 17
 print("OK")
 """,
         ndev=8,
         timeout=900,
+    )
+
+
+def test_stokes_staggered_cycle_halves_center_cycle_at_34cubed():
+    """The tentpole claim of the staggered-multigrid refactor: at 34^3
+    the coupled staggered tree cycle (per-location transfers, coupled
+    full-stress smoothing) preconditions the velocity block in <= HALF
+    the CG iterations of the historical cell-centered cycle, whose
+    misaligned transfers cost it resolution-independence."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.stokes import Stokes3D
+
+app = Stokes3D(nx=18, ny=18, nz=18, dims=(2, 2, 2))
+_, stag = app.velocity_solve(precond="stress", tol=1e-8)
+_, cent = app.velocity_solve(precond="center", tol=1e-8)
+print("34^3 velocity: staggered", stag.iterations, "center", cent.iterations)
+assert stag.converged and cent.converged
+assert stag.iterations * 2 <= cent.iterations, \\
+    (stag.iterations, cent.iterations)
+assert stag.iterations <= 13, stag.iterations    # recorded 9
+assert cent.iterations <= 32, cent.iterations    # recorded 23
+print("OK")
+""",
+        ndev=8,
+        timeout=2400,
+    )
+
+
+def test_stokes_schur_cg_beats_uzawa_iteration_ceilings():
+    """Schur-complement CG must keep converging in <= 1/3 the outer
+    velocity solves of the viscosity-scaled Uzawa loop at the same
+    ||div V|| tolerance (recorded: 10 vs 52 at 14^3, tol 1e-6)."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.stokes import Stokes3D
+
+app = Stokes3D(nx=8, ny=8, nz=8, dims=(2, 2, 2))
+_, _, schur = app.solve(tol=1e-6, method="schur")
+_, _, uzawa = app.solve(tol=1e-6, method="uzawa")
+print("stokes outer: schur", schur.outer_iterations,
+      "uzawa", uzawa.outer_iterations)
+assert schur.converged and uzawa.converged
+assert schur.outer_iterations * 3 <= uzawa.outer_iterations, \\
+    (schur.outer_iterations, uzawa.outer_iterations)
+assert schur.outer_iterations <= 14, schur.outer_iterations  # recorded 10
+print("OK")
+""",
+        ndev=8,
+        timeout=1800,
     )
 
 

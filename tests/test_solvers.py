@@ -465,3 +465,87 @@ print("OK")
 """,
         ndev=8,
     )
+
+
+def test_cg_dtype_option_mixed_precision():
+    """cg(dtype=jnp.float32) on f64 operands runs the whole Krylov loop
+    in f32 (f32 iterate out) yet converges to the same solution as the
+    f64 solve at an f32-attainable tolerance, with the same iteration
+    count to within a couple of steps — the f64 acc_dtype reductions
+    keep the stopping test faithful."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro import solvers
+from repro.apps.poisson import Poisson3D
+
+app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+u64, i64 = solvers.cg(app.grid, app.apply_A, app.b, tol=1e-5,
+                      args=(app.c,))
+u32, i32 = solvers.cg(app.grid, app.apply_A, app.b, tol=1e-5,
+                      args=(app.c,), dtype=jnp.float32)
+print("cg f64", i64.iterations, "f32", i32.iterations, u32.dtype)
+assert i64.converged and i32.converged
+assert u32.dtype == jnp.float32
+assert abs(i32.iterations - i64.iterations) <= 3, (i64, i32)
+err = np.abs(app.grid.gather(u32).astype(np.float64)
+             - app.grid.gather(u64)).max()
+rel = err / np.abs(app.grid.gather(u64)).max()
+print("f32-vs-f64 rel err", rel)
+assert rel < 1e-4, rel
+print("OK")
+""",
+        ndev=8,
+    )
+
+
+def test_face_located_multigrid_solve_matches_cg():
+    """The location-generic V-cycle solver on a face Field: for each
+    face location, multigrid_solve agrees with CG on the same staggered
+    operator (repro.stencil.mac stripped component) to 1e-8 and returns
+    a Field of the same location — the tentpole contract of the
+    per-location transfer machinery."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro import fields, solvers
+from repro.solvers.multigrid import face_stencil
+
+g = init_global_grid(10, 10, 10, dims=(2, 2, 2), dtype=jnp.float64)
+sp = (0.1, 0.1, 0.1)
+rng = np.random.RandomState(0)
+c = fields.Field(g, g.update_halo_g(
+    fields.scatter(g, 1.0 + 0.5 * rng.rand(*g.global_shape)).data), "center")
+for loc in ("xface", "yface", "zface"):
+    sd = fields.stagger_dim(loc)
+    b = fields.from_global_fn(
+        g, lambda ix, iy, iz: jnp.sin(ix * 0.3) + jnp.cos(iy * 0.2 + iz * 0.1),
+        loc)
+
+    @g.parallel
+    def maskb(b, loc=loc):
+        return b.with_data(b.data
+                           * fields.interior_mask(g, loc, jnp.float64)
+                           * fields.valid_mask(g, loc, jnp.float64))
+
+    b = maskb(b)
+    x, info = solvers.multigrid_solve(g, c, b, sp, tol=1e-10)
+    assert info.converged
+    assert x.loc == loc, (x.loc, loc)
+
+    def apply_A(u, c, loc=loc, sd=sd):
+        u = fields.update_halo(g, u)
+        m = fields.interior_mask(g, loc, jnp.float64)
+        return u.with_data(face_stencil(u.data, c.data, sp, sd) * m)
+
+    xc, ci = solvers.cg(g, apply_A, b, tol=1e-12, args=(c,))
+    err = np.abs(fields.gather(x) - fields.gather(xc)).max() \\
+        / np.abs(fields.gather(xc)).max()
+    print(loc, "mg", info.iterations, "cg", ci.iterations, "err", err)
+    assert err < 1e-8, (loc, err)
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
+    )

@@ -1,0 +1,174 @@
+"""Full-stress Stokes: operator oracle, Schur-complement SPD, Schur-CG.
+
+The flagship contract of the staggered solver stack:
+
+* the device full-stress operator ``-div(2 eta D(V))`` (and the
+  stripped block, both BCs) matches the NumPy oracle application on the
+  gathered global arrays — on 1 rank AND 8 ranks, so the halo exchange /
+  masks / gather path is covered, not just the stencil arithmetic;
+* the Schur complement ``S = -div A^-1 grad`` is symmetric positive
+  definite on mean-zero pressures (the property Schur-CG relies on);
+* the full Schur-CG solve agrees with the independent oracle loop
+  (coupled-CG velocities inside Uzawa) and converges on 2 ranks — the
+  CI ``stokes-smoke`` gate.
+"""
+
+from _mp import run
+
+_OP_MATCH = """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.stokes import Stokes3D
+from repro import fields
+
+for stress in ("full", "stripped"):
+    for bc in ("noslip", "freeslip"):
+        app = Stokes3D(nx=9, ny=8, nz=7, dims={dims}, stress=stress, bc=bc)
+        g = app.grid
+        rng = np.random.RandomState(0)
+        comps, raw = {{}}, []
+        for name, loc in zip(("vx", "vy", "vz"), ("xface", "yface", "zface")):
+            f = fields.Field(g, g.scatter(rng.randn(*g.global_shape)), loc)
+
+            @g.parallel
+            def mk(f, loc=loc):
+                return f.with_data(
+                    f.data * fields.interior_mask(g, loc, jnp.float64))
+
+            f = mk(f)
+            comps[name] = f
+            raw.append(g.gather(np.asarray(f.data)))
+        V = fields.FieldSet(**comps)
+
+        # halo-update the operator output before gathering: the stencil
+        # leaves non-owned halo planes unspecified (CG's masked
+        # reductions never read them), but gather() reads each block's
+        # full local array.
+        @g.parallel
+        def A(V, eta):
+            return fields.update_halo(g, app.apply_A(V, eta))
+
+        AV = A(V, app.eta)
+        ref = app.oracle_apply(raw)
+        scale = max(np.abs(r).max() for r in ref)
+        for i, name in enumerate(("vx", "vy", "vz")):
+            err = np.abs(g.gather(np.asarray(AV[name].data)) - ref[i]).max() / scale
+            assert err < 1e-6, (stress, bc, name, err)  # observed ~1e-13
+print("OK")
+"""
+
+
+def test_full_stress_operator_matches_oracle_1rank():
+    run(_OP_MATCH.format(dims="(1, 1, 1)"), ndev=1)
+
+
+def test_full_stress_operator_matches_oracle_8rank():
+    run(_OP_MATCH.format(dims="(2, 2, 2)"), ndev=8)
+
+
+def test_schur_complement_spd_on_random_pressures():
+    """<S p, q> == <p, S q> and <S p, p> > 0 for random mean-zero
+    pressures, with tight (1e-13) inner velocity solves — the property
+    that makes CG on the Schur complement legitimate."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.stokes import Stokes3D
+from repro import fields, solvers
+
+app = Stokes3D(nx=10, ny=10, nz=10, dims=(1, 1, 1))
+g = app.grid
+
+from repro.solvers import reductions as red
+
+def rand_p(seed):
+    # random mean-zero pressure supported on the unknowns
+    rng = np.random.RandomState(seed)
+    P = fields.Field(g, g.scatter(rng.randn(*g.global_shape)), "center")
+
+    @g.parallel
+    def mk(P):
+        mc = fields.interior_mask(g, "center", jnp.float64)
+        ms = fields.solve_mask(g, "center", jnp.float64)
+        p = P.data * mc
+        return P.with_data((p - red.masked_mean(g, p, ms)) * mc)
+
+    return mk(P)
+
+def S(p):
+    G = app._grad_P(p)
+    W, wi = solvers.cg(g, app.apply_A, G, tol=1e-13, maxiter=5000,
+                       apply_M=app._precond("stress"), args=(app.eta,))
+    assert wi.converged
+    Sp, _ = app._neg_div(W)
+    return Sp
+
+p, q = rand_p(1), rand_p(2)
+Sp, Sq = S(p), S(q)
+lhs, rhs = app._pdot(Sp, q), app._pdot(p, Sq)
+den = abs(lhs) + abs(rhs)
+print("symmetry:", lhs, rhs, abs(lhs - rhs) / den)
+assert abs(lhs - rhs) <= 1e-8 * den, (lhs, rhs)
+spp = app._pdot(Sp, p)
+sqq = app._pdot(Sq, q)
+print("definiteness:", spp, sqq)
+assert spp > 0 and sqq > 0
+print("OK")
+""",
+        ndev=1,
+        timeout=900,
+    )
+
+
+def test_stokes_schur_smoke_2rank():
+    """CI gate: a 2-rank full-stress Schur-CG Stokes solve converges and
+    leaves a small momentum residual (the flagship path end to end)."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.stokes import Stokes3D
+
+app = Stokes3D(nx=10, ny=8, nz=8, dims=(2, 1, 1))
+V, P, info = app.solve(tol=1e-6, method="schur")
+print("schur:", info)
+assert info.converged
+assert info.relres_momentum < 1e-4
+assert info.outer_iterations <= 30, info.outer_iterations
+print("OK")
+""",
+        ndev=2,
+        timeout=900,
+    )
+
+
+def test_freeslip_schur_matches_oracle():
+    """Free-slip BCs end to end: the Schur-CG solution on 8 ranks agrees
+    with the independent oracle (coupled CG + Uzawa) under the
+    tangential zero-flux ghost convention."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.stokes import Stokes3D
+from repro import fields
+
+app = Stokes3D(nx=8, ny=8, nz=8, dims=(2, 2, 2), bc="freeslip")
+V, P, info = app.solve(tol=1e-7, method="schur")
+print("freeslip schur:", info)
+assert info.converged
+
+Vx, Vy, Vz, Po = app.oracle(tol=1e-9)
+ref = {"vx": Vx[:-1, :, :], "vy": Vy[:, :-1, :], "vz": Vz[:, :, :-1]}
+scale = max(np.abs(r).max() for r in ref.values())
+for k in V.keys():
+    err = np.abs(fields.gather(V[k]) - ref[k]).max() / scale
+    print(k, "err", err)
+    assert err < 1e-4, (k, err)
+gp = app.grid.gather(P.data)[1:-1, 1:-1, 1:-1]
+rp = Po[1:-1, 1:-1, 1:-1]
+perr = np.abs(gp - rp).max() / np.abs(rp).max()
+print("P err", perr)
+assert perr < 1e-4, perr
+print("OK")
+""",
+        ndev=8,
+        timeout=1200,
+    )
