@@ -1,0 +1,79 @@
+"""Iteration ceilings for the recorded benchmark rows (CI regression gate).
+
+Same methodology as ``tests/test_convergence_regression.py``: each
+ceiling is the recorded iteration count of the quick benchmark
+configuration plus ~40% headroom — far above run-to-run noise
+(iteration counts are DETERMINISTIC for a fixed problem; they only move
+when someone changes the operators, masks, transfers, or convergence
+test), yet tight enough that an algorithmic regression (e.g. a broken
+preconditioner silently falling back to plain CG) fails the gate.
+
+The quick harnesses are weak-scaling style (fixed LOCAL size), so fewer
+ranks means a smaller global problem and iteration counts at or below
+the 8-rank reference recording — the 8-rank ceilings are valid upper
+bounds for the 2-rank CI run too.
+
+``check(results)`` takes the ``results`` dict of ``benchmarks/run.py``
+(harness name -> harness return value) and returns a list of violation
+strings (empty when everything is within bounds).
+"""
+
+from __future__ import annotations
+
+# quick solver_bench (Poisson 34^3 global, tol 1e-6 / f32 rows 1e-5);
+# recorded on the 8-rank reference run of BENCH_6.json
+SOLVER_CEILINGS = {
+    "cg": 120,         # recorded 85
+    "cg+hide": 120,    # identical arithmetic to cg (recorded 85)
+    "mgcg": 14,        # recorded 10
+    "pt": 350,         # recorded 249
+    "mg": 24,          # recorded 17
+    "cg/per": 48,      # recorded 34
+    "mgcg/per": 10,    # recorded 7
+    "cg/f64@5": 97,    # recorded 69 (tol 1e-5)
+    "cg/f32": 104,     # recorded 74 (f32 rounding costs a few iterations)
+    "mgcg/f32": 12,    # recorded 8
+}
+
+# quick stokes_bench (14^3 global): velocity-block solve to 1e-8
+STOKES_CEILINGS = {
+    "stress": 10,      # recorded 7
+    "face": 24,        # recorded 17
+    "center": 25,      # recorded 18
+    "plain": 108,      # recorded 77
+}
+
+
+def _check_rows(rows: dict, ceilings: dict, label: str) -> list[str]:
+    out = []
+    for method, ceiling in ceilings.items():
+        r = rows.get(method)
+        if r is None or "iters" not in r:
+            continue  # row not recorded in this run (e.g. --only subset)
+        if r["iters"] > ceiling:
+            out.append(f"{label}/{method}: {r['iters']} iterations "
+                       f"> ceiling {ceiling}")
+        if not r.get("converged", True):
+            out.append(f"{label}/{method}: did not converge "
+                       f"(relres {r.get('relres')})")
+    return out
+
+
+def check(results: dict) -> list[str]:
+    """Violations of the recorded harness results against the ceilings."""
+    out = []
+    solvers = (results.get("solvers") or {}).get("rows", {})
+    out += _check_rows(solvers, SOLVER_CEILINGS, "solvers")
+    stokes = (results.get("stokes") or {}).get("rows", {})
+    out += _check_rows(stokes, STOKES_CEILINGS, "stokes")
+    ov = solvers.get("telemetry_overhead")
+    if ov is not None:
+        # The 2% bar is relative; on the tiny CI problem a quick mgcg
+        # solve is O(20 ms), where timer noise alone exceeds 2%.  Only
+        # flag when the absolute excess also clears a 5 ms noise floor.
+        excess_s = ov["instrumented_s"] - ov["plain_s"]
+        if ov["overhead_fraction"] > 0.02 and excess_s > 0.005:
+            out.append(f"solvers/telemetry_overhead: "
+                       f"{ov['overhead_fraction']*100:.2f}% > 2% bar "
+                       f"(+{excess_s*1e3:.1f} ms)")
+    return out

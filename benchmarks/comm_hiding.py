@@ -64,6 +64,12 @@ print("RESULT" + __import__("json").dumps(res))
     same_bytes = cp.get("bytes") == ch.get("bytes")
     print(f" identical halo bytes under hide: {same_bytes} "
           "(the split moves compute, not communication)")
+    # comm/compute split via hide on/off: the step-time delta is the
+    # exposed communication of the plain schedule (>= 0 on real
+    # multi-chip hardware; can be noise-negative on shared-core fakes)
+    res["comm_hidden_fraction"] = 1.0 - res["hidden_ms"] / res["plain_ms"]
+    print(f" comm hidden fraction (plain -> hidden step time): "
+          f"{res['comm_hidden_fraction']*100:+.0f}%")
     assert res["bitwise_equal"]
     return res
 

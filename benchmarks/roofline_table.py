@@ -3,16 +3,39 @@
 Writes results/roofline.md (markdown) and prints a compact table.
 Roofline fraction := useful-model-compute time / dominant-term time,
 i.e. (MODEL_FLOPS/chips/peak) / max(compute_s, memory_s, collective_s).
+
+Two row kinds:
+
+* DRY-RUN rows from ``results/dryrun/*.json`` (the LLM-shape cells).
+  Shapes outside the four canonical presets sort after them instead of
+  crashing the aggregation (a custom dry-run shape used to hard-crash
+  ``SHAPE_ORDER.index``).
+* SOLVER rows from the newest recorded ``BENCH_<pr>.json`` (see
+  ``benchmarks/run.py --record``): one row per solver-bench method with
+  measured time/iteration, the paper's T_eff, and the counted per-solve
+  halo bytes / all-reduces — the stencil-solver analogue of the
+  roofline cells.
 """
 
+import glob
 import json
 import os
+import re
 
-RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-                       "results", "dryrun")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "results", "dryrun")
 OUT = os.path.join(os.path.dirname(RESULTS), "roofline.md")
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _shape_rank(shape) -> int:
+    """Order the canonical LLM presets first; any other shape (custom
+    dry-runs, solver grids) sorts after them instead of raising."""
+    try:
+        return SHAPE_ORDER.index(shape)
+    except ValueError:
+        return len(SHAPE_ORDER)
 
 
 def load():
@@ -22,9 +45,46 @@ def load():
     for fn in sorted(os.listdir(RESULTS)):
         if fn.endswith(".json"):
             rows.append(json.load(open(os.path.join(RESULTS, fn))))
-    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]),
+    rows.sort(key=lambda r: (r["arch"], _shape_rank(r["shape"]), r["shape"],
                              r["mesh"]))
     return rows
+
+
+def latest_bench_path() -> str | None:
+    """Newest recorded benchmark aggregate (highest PR number)."""
+    paths = glob.glob(os.path.join(ROOT, "BENCH_*.json"))
+
+    def pr_of(p):
+        m = re.search(r"BENCH_(\d+)\.json$", p)
+        return int(m.group(1)) if m else -1
+
+    paths = [p for p in paths if pr_of(p) >= 0]
+    return max(paths, key=pr_of) if paths else None
+
+
+def load_solver_rows():
+    """Solver rows out of the newest BENCH_<pr>.json (empty if none)."""
+    path = latest_bench_path()
+    if path is None:
+        return [], None
+    bench = json.load(open(path))
+    solvers = bench.get("results", {}).get("solvers")
+    if not solvers:
+        return [], os.path.basename(path)
+    shape = "x".join(str(n) for n in solvers.get("global_shape", []))
+    mesh = "x".join(str(d) for d in solvers.get("dims", []))
+    rows = []
+    for method, r in solvers.get("rows", {}).items():
+        if "iters" not in r:
+            continue  # derived rows (comm split, overhead)
+        rows.append(dict(
+            kind="solver", method=method, shape=shape, mesh=mesh,
+            iters=r["iters"], s_per_iter=r["s_per_iter"],
+            t_eff_gbs=r.get("t_eff_gbs"),
+            halo_bytes=r.get("halo_bytes"),
+            all_reduces=r.get("all_reduces"),
+        ))
+    return rows, os.path.basename(path)
 
 
 def fraction(r):
@@ -60,29 +120,62 @@ def render(rows):
     return "\n".join(lines)
 
 
+def render_solver(rows):
+    lines = [
+        "| method | global shape | mesh | iters | ms/iter | T_eff GB/s | "
+        "halo MB/solve | all-reduces/solve |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        t_eff = "—" if r["t_eff_gbs"] is None else f"{r['t_eff_gbs']:.3f}"
+        halo = "—" if r["halo_bytes"] is None \
+            else f"{r['halo_bytes'] / 2**20:.2f}"
+        ar = "—" if r["all_reduces"] is None else str(r["all_reduces"])
+        lines.append(
+            f"| {r['method']} | {r['shape']} | {r['mesh']} | {r['iters']} | "
+            f"{r['s_per_iter']*1e3:.2f} | {t_eff} | {halo} | {ar} |"
+        )
+    return "\n".join(lines)
+
+
 def run(quick=True):
     rows = load()
-    if not rows:
-        print("(no dry-run results yet — run python -m repro.launch.dryrun --all)")
+    solver_rows, bench_name = load_solver_rows()
+    if not rows and not solver_rows:
+        print("(no dry-run results yet — run python -m repro.launch.dryrun "
+              "--all; no BENCH_<pr>.json either — run "
+              "python -m benchmarks.run --record)")
         return {}
-    table = render(rows)
+    sections = ["# Roofline table (from the multi-pod dry-run)"]
+    if rows:
+        sections.append(render(rows))
+    else:
+        sections.append("(no dry-run results recorded)")
+    if solver_rows:
+        sections.append(f"## Solver rows (from {bench_name})\n\n"
+                        + render_solver(solver_rows))
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
-        f.write("# Roofline table (from the multi-pod dry-run)\n\n" + table + "\n")
+        f.write("\n\n".join(sections) + "\n")
     ok = [r for r in rows if r["status"] == "ok"]
     skipped = [r for r in rows if r["status"] == "skipped"]
-    print(f"== roofline table: {len(ok)} compiled cells, {len(skipped)} skipped "
-          f"-> {OUT} ==")
+    print(f"== roofline table: {len(ok)} compiled cells, {len(skipped)} "
+          f"skipped, {len(solver_rows)} solver rows -> {OUT} ==")
     by_dom = {}
     for r in ok:
         by_dom.setdefault(r["roofline"]["dominant"], []).append(r)
     for dom, rs in sorted(by_dom.items()):
         print(f"  {dom}-bound: {len(rs)} cells")
-    worst = sorted(ok, key=fraction)[:5]
-    print("  worst roofline fractions:")
-    for r in worst:
-        print(f"   {r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} {fraction(r):.3f}")
-    return {"n_ok": len(ok), "n_skipped": len(skipped)}
+    if ok:
+        worst = sorted(ok, key=fraction)[:5]
+        print("  worst roofline fractions:")
+        for r in worst:
+            print(f"   {r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                  f"{fraction(r):.3f}")
+    if solver_rows:
+        print(render_solver(solver_rows))
+    return {"n_ok": len(ok), "n_skipped": len(skipped),
+            "n_solver_rows": len(solver_rows)}
 
 
 if __name__ == "__main__":

@@ -3,13 +3,16 @@
     Fig 2  -> weak_scaling_heat      (3-D heat diffusion, 1 -> 2197 GPUs)
     Fig 3  -> weak_scaling_twophase  (two-phase flow, 1 -> 1024 GPUs + CUDA-C ref)
     §2     -> comm_hiding            (@hide_communication on/off)
-    §Roofline -> roofline_table      (aggregates the dry-run cells)
+    §Roofline -> roofline_table      (aggregates the dry-run cells +
+                                      solver rows from BENCH_<pr>.json)
     solvers -> solver_bench          (CG / MG-preconditioned CG / pseudo-
                                       transient / multigrid, with and
                                       without operator comm overlap;
                                       periodic rows; mixed-precision
                                       cg/f32 + mgcg/f32 rows vs the f64
-                                      reference at the same tolerance)
+                                      reference at the same tolerance —
+                                      every row with T_eff, halo bytes,
+                                      and all-reduce counts)
     stokes  -> stokes_bench          (full-stress staggered Stokes:
                                       velocity block under coupled
                                       staggered-MG vs face/center-cycle
@@ -17,12 +20,33 @@
                                       vs Uzawa outer loop)
 
 ``python -m benchmarks.run`` runs all in quick mode; ``--full`` uses the
-larger measurement sizes.
+larger measurement sizes.  Telemetry modes:
+
+* ``--record PATH`` — aggregate every harness's returned rows into one
+  machine-readable JSON (the repo convention is ``BENCH_<pr>.json`` at
+  the repo root; ``roofline_table`` picks the newest up automatically);
+* ``--trace PATH`` — run everything under a telemetry session and write
+  a Chrome-trace/Perfetto span export (load in ``ui.perfetto.dev``);
+* ``--ndev N`` — device count for the multi-device harnesses (meshes
+  adapt via ``_mp_inline.mesh_dims``; the quick problems are
+  weak-scaling style — fixed local size — so fewer ranks solve a
+  smaller global problem with iteration counts at or below the 8-rank
+  reference);
+* ``--check-ceilings`` — fail (exit 1) if any recorded solver iteration
+  count exceeds the ceilings of ``benchmarks/ceilings.py`` (the CI
+  ``bench-quick`` regression gate).
 """
 
 import argparse
+import inspect
+import json
+import os
 import sys
 import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.join(ROOT, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
 
 
 def main() -> None:
@@ -30,9 +54,19 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", choices=["heat", "twophase", "hide", "roofline",
                                        "solvers", "stokes"])
+    ap.add_argument("--record", metavar="PATH",
+                    help="write the aggregated results JSON (BENCH_<pr>.json)")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="write a Chrome-trace span export of the run")
+    ap.add_argument("--ndev", type=int, default=8,
+                    help="device count for multi-device harnesses")
+    ap.add_argument("--check-ceilings", action="store_true",
+                    help="fail if recorded iteration counts exceed "
+                         "benchmarks/ceilings.py")
     args = ap.parse_args()
     quick = not args.full
 
+    from repro import telemetry as tele
     from benchmarks import (weak_scaling_heat, weak_scaling_twophase,  # noqa
                             comm_hiding, roofline_table, solver_bench,
                             stokes_bench)
@@ -47,15 +81,54 @@ def main() -> None:
     }
     if args.only:
         harnesses = {args.only: harnesses[args.only]}
+
+    sink = tele.ChromeTraceSink(args.trace) if args.trace \
+        else tele.MemorySink()
     t0 = time.time()
     failures = []
-    for name, mod in harnesses.items():
-        print(f"\n########## {name} ##########")
-        try:
-            mod.run(quick=quick)
-        except Exception as e:  # keep going; report at the end
-            failures.append((name, repr(e)))
-            print(f"[bench] {name} FAILED: {e!r}")
+    results = {}
+    with tele.session(sink=sink, meta={"quick": quick, "ndev": args.ndev}):
+        for name, mod in harnesses.items():
+            print(f"\n########## {name} ##########")
+            kw = {"quick": quick}
+            if "ndev" in inspect.signature(mod.run).parameters:
+                kw["ndev"] = args.ndev
+            try:
+                with tele.region(f"bench.{name}"):
+                    results[name] = mod.run(**kw)
+            except Exception as e:  # keep going; report at the end
+                failures.append((name, repr(e)))
+                print(f"[bench] {name} FAILED: {e!r}")
+    if args.trace:
+        sink.close()
+        print(f"[bench] trace -> {args.trace} "
+              f"({len(sink.events)} events; open in ui.perfetto.dev)")
+
+    if args.record:
+        payload = {
+            "bench": os.path.basename(args.record),
+            "quick": quick,
+            "ndev": args.ndev,
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "results": results,
+            "failures": dict(failures),
+        }
+        with open(args.record, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[bench] recorded -> {args.record}")
+
+    if args.check_ceilings:
+        from benchmarks.ceilings import check
+        violations = check(results)
+        if violations:
+            print("[bench] ITERATION CEILING VIOLATIONS:")
+            for v in violations:
+                print(f"  {v}")
+            failures.append(("ceilings", f"{len(violations)} violations"))
+        else:
+            print("[bench] all recorded iteration counts within ceilings")
+
     print(f"\n== benchmarks done in {time.time()-t0:.0f}s; "
           f"{len(failures)} failures ==")
     for name, err in failures:

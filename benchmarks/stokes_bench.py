@@ -15,7 +15,11 @@ Figure of merit, same two axes as ``solver_bench``:
   matvec) vs the viscosity-scaled Uzawa loop, both to the same
   ``||div V||`` reduction — Schur-CG needs several-fold fewer.
 
-All on the 8-device 2x2x2 mesh.
+Every velocity-block row reports the paper's ``T_eff`` (GB/s, from
+``Stokes3D.a_eff_per_iteration``) and the exact per-solve halo bytes /
+all-reduce counts from the trace-time counters of
+:mod:`repro.telemetry`.  Defaults to the 8-device 2x2x2 mesh
+(``ndev``-parameterized like ``solver_bench``).
 """
 
 from __future__ import annotations
@@ -24,19 +28,29 @@ from __future__ import annotations
 SNIPPET = """
 jax.config.update("jax_enable_x64", True)
 import time, json
+from repro import telemetry as tele
 from repro.apps.stokes import Stokes3D
 
-app = Stokes3D(nx={nx}, ny={nx}, nz={nx}, dims=(2, 2, 2))
+app = Stokes3D(nx={nx}, ny={nx}, nz={nx}, dims={dims})
 rows = {{}}
 for label in ("stress", "face", "center", "plain"):
     pc = None if label == "plain" else label
-    V, info = app.velocity_solve(precond=pc, tol={tol})  # warm-up
-    t0 = time.perf_counter()
-    V, info = app.velocity_solve(precond=pc, tol={tol})
-    wall = time.perf_counter() - t0
+    with tele.session():
+        V, info = app.velocity_solve(precond=pc, tol={tol})  # warm-up
+        t0 = time.perf_counter()
+        V, info = app.velocity_solve(precond=pc, tol={tol})
+        wall = time.perf_counter() - t0
+    tot = info.comm.totals(info.iterations)
     rows[label] = dict(iters=info.iterations, relres=float(info.relres),
                        converged=bool(info.converged), wall_s=wall,
-                       s_per_iter=wall / max(info.iterations, 1))
+                       s_per_iter=wall / max(info.iterations, 1),
+                       t_eff_gbs=float(app.t_eff(info)),
+                       halo_bytes=int(tot.halo_bytes),
+                       all_reduces=int(tot.all_reduces),
+                       all_reduces_per_iter=int(
+                           info.comm.per_iteration.all_reduces),
+                       residual_last=float(info.residuals[-1])
+                       if len(info.residuals) else None)
 
 outer = {{}}
 for method in ("schur", "uzawa"):
@@ -49,33 +63,42 @@ for method in ("schur", "uzawa"):
                          converged=bool(sinfo.converged),
                          wall_s=time.perf_counter() - t0)
 print("RESULT" + json.dumps(dict(global_shape=list(app.grid.global_shape),
-                                 rows=rows, outer=outer)))
+                                 dims=list({dims}), rows=rows, outer=outer)))
 """
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, ndev: int = 8):
     import json
 
-    from benchmarks._mp_inline import run_snippet
+    from benchmarks._mp_inline import mesh_dims, run_snippet
 
     nx = 8 if quick else 18   # local incl halo; 18 -> 34^3 global
     tol = 1e-8
     stokes_tol = 1e-6
+    dims = mesh_dims(ndev)
     out = run_snippet(
-        SNIPPET.format(nx=nx, tol=tol, stokes_tol=stokes_tol), ndev=8,
-        timeout=3600)
+        SNIPPET.format(nx=nx, tol=tol, stokes_tol=stokes_tol, dims=dims),
+        ndev=ndev, timeout=3600)
     line = [l for l in out.splitlines() if l.startswith("RESULT")][0]
     res = json.loads(line[len("RESULT"):])
     shape = res["global_shape"]
     print(f"== stokes bench: full-stress variable-viscosity Stokes, "
-          f"global {shape}, 8 devices (2x2x2) ==")
+          f"global {shape}, {ndev} devices {dims} ==")
     print(f"  velocity-block solve to {tol} (3 coupled staggered "
           f"components, one FieldSet CG):")
     print(f"  {'precond':8s} {'iters':>6s} {'relres':>9s} {'ms/iter':>9s} "
-          f"{'total s':>8s}")
+          f"{'total s':>8s} {'T_eff':>7s} {'halo MB':>8s} {'allred':>7s}")
+    from repro import telemetry as tele
+
     for m, r in res["rows"].items():
         print(f"  {m:8s} {r['iters']:6d} {r['relres']:9.1e} "
-              f"{r['s_per_iter']*1e3:9.2f} {r['wall_s']:8.2f}")
+              f"{r['s_per_iter']*1e3:9.2f} {r['wall_s']:8.2f} "
+              f"{r['t_eff_gbs']:7.3f} {r['halo_bytes']/2**20:8.2f} "
+              f"{r['all_reduces']:7d}")
+        # forward into the parent session for --trace / --record artifacts
+        tele.metric(f"stokes.{m}.t_eff_gbs", r["t_eff_gbs"],
+                    iters=r["iters"], wall_s=r["wall_s"],
+                    halo_bytes=r["halo_bytes"], all_reduces=r["all_reduces"])
     st_it = res["rows"]["stress"]["iters"]
     ce_it = res["rows"]["center"]["iters"]
     print(f"  staggered (coupled) vs center-cycle iterations: "

@@ -37,7 +37,14 @@ def measure_single_device(n=128, nt=10, dtype="float32"):
     dt = (time.perf_counter() - t0) / nt
     cells = n ** 3
     bw = cells * app.bytes_per_step_per_cell() / dt
-    return dict(n=n, step_s=dt, cpu_effective_gbs=bw / 1e9)
+    # t_eff_gbs is the paper's T_eff = A_eff / t_it (numerically equal to
+    # the effective-bandwidth figure above: heat3d's D_u=1/D_k=1 gives
+    # A_eff = 3 * n * itemsize = bytes_per_step_per_cell * n); the pure
+    # stencil step performs NO reductions, so all_reduces is zero.
+    return dict(n=n, step_s=dt, cpu_effective_gbs=bw / 1e9,
+                t_eff_gbs=app.t_eff(dt), iters=nt,
+                halo_bytes_per_step=app.halo_bytes_per_step(),
+                all_reduces=0)
 
 
 def collective_bytes_8dev():
@@ -84,7 +91,9 @@ def run(quick=True):
     print("== Fig 2 harness: heat3d weak scaling ==")
     m = measure_single_device(n=96 if quick else 192, nt=5 if quick else 20)
     print(f" single-device (CPU) {m['n']}^3: {m['step_s']*1e3:.1f} ms/step "
-          f"({m['cpu_effective_gbs']:.1f} GB/s effective)")
+          f"(T_eff {m['t_eff_gbs']:.1f} GB/s; "
+          f"{m['halo_bytes_per_step']/2**20:.2f} MB halo/step, "
+          f"{m['all_reduces']} all-reduces)")
     coll = collective_bytes_8dev()
     print(f" 8-device lowered step collectives: {coll}")
     print(" v5e roofline weak-scaling model (local 512^3, f32):")

@@ -67,7 +67,9 @@ def measure_single_device(n=96, nt=5):
     for _ in range(max(2, nt // 2)):
         Pe_n, phi_n = np_step(Pe_n, phi_n)
     dt_np = (time.perf_counter() - t0) / max(2, nt // 2)
-    return dict(n=n, step_s=dt, numpy_step_s=dt_np, xla_speedup=dt_np / dt)
+    return dict(n=n, step_s=dt, numpy_step_s=dt_np, xla_speedup=dt_np / dt,
+                t_eff_gbs=app.t_eff(dt),
+                halo_bytes_per_step=app.halo_bytes_per_step())
 
 
 def measure_methods(n=28, nt=3):
@@ -82,16 +84,25 @@ def measure_methods(n=28, nt=3):
     rows = []
     for method, overlap in [("explicit", False), ("cg", False),
                             ("cg", True), ("mgcg", False), ("mgcg", True)]:
+        from repro import telemetry as tele
+
         app = TwoPhase3D(**base, method=method, overlap=overlap)
         S = app.init_fields()
         S, _ = app.run(1, S)                      # compile + warm up
-        t0 = time.perf_counter()
-        S, infos = app.run(nt, S)
-        step_s = (time.perf_counter() - t0) / nt
+        with tele.session():
+            t0 = time.perf_counter()
+            S, infos = app.run(nt, S)
+            step_s = (time.perf_counter() - t0) / nt
         iters = (sum(i.iterations for i in infos) / len(infos)
                  if infos else float("nan"))
-        rows.append(dict(method=method, overlap=overlap, dt=app.dt,
-                         step_s=step_s, iters=iters))
+        comm = infos[0].comm if infos and infos[0].comm is not None else None
+        rows.append(dict(
+            method=method, overlap=overlap, dt=app.dt,
+            step_s=step_s, iters=iters, t_eff_gbs=app.t_eff(step_s),
+            all_reduces_per_iter=(comm.per_iteration.all_reduces
+                                  if comm else 0),
+            halo_bytes_per_iter=(comm.per_iteration.halo_bytes
+                                 if comm else 0)))
     return rows
 
 
@@ -110,11 +121,14 @@ def run(quick=True):
           f"NumPy baseline {m['numpy_step_s']*1e3:.1f} ms "
           f"(XLA speedup {m['xla_speedup']:.2f}x; paper: Julia at 90% of CUDA C)")
     print(" integrator comparison (implicit dt = 10x the explicit limit):")
-    print("  method    overlap       dt     iters/step    ms/step")
-    for r in measure_methods(n=28 if quick else 48, nt=3 if quick else 6):
+    print("  method    overlap       dt     iters/step    ms/step"
+          "     T_eff  allred/it")
+    method_rows = measure_methods(n=28 if quick else 48, nt=3 if quick else 6)
+    for r in method_rows:
         it = "-" if r["iters"] != r["iters"] else f"{r['iters']:.1f}"
         print(f"  {r['method']:<9s} {str(r['overlap']):<7s} "
-              f"{r['dt']:9.2e}  {it:>9s}  {r['step_s']*1e3:9.1f}")
+              f"{r['dt']:9.2e}  {it:>9s}  {r['step_s']*1e3:9.1f} "
+              f"{r['t_eff_gbs']:9.3f}  {r['all_reduces_per_iter']:9d}")
     print(" v5e roofline weak-scaling model (local 382^3, f64):")
     print("  P      eff(no hide)  eff(hide)")
     for p in [1, 8, 64, 512, 1024]:
@@ -123,7 +137,7 @@ def run(quick=True):
         print(f"  {p:5d}  {e0:11.3f}  {e1:9.3f}")
     print(f" paper reports >95% @ 1024; model: no-hide "
           f"{model_efficiency(hide=False):.3f}, hide {model_efficiency(hide=True):.3f}")
-    return {"single_dev": m,
+    return {"single_dev": m, "methods": method_rows,
             "eff_no_hide": model_efficiency(hide=False),
             "eff_hide": model_efficiency(hide=True)}
 

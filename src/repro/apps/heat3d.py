@@ -15,6 +15,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as tele
 from repro.core import ImplicitGlobalGrid, init_global_grid
 from repro.kernels.stencil3d import heat_step_ref
 from repro.kernels.stencil3d.kernel import heat_step_pallas
@@ -79,9 +80,10 @@ class Heat3D:
     def run(self, nt: int, T=None, Ci=None):
         if T is None:
             T, Ci = self.init_fields()
-        for _ in range(nt):
-            T = self._step(T, Ci)
-        T.block_until_ready()
+        with tele.region("heat3d.run", nt=nt, sync=lambda: T):
+            for _ in range(nt):
+                T = self._step(T, Ci)
+            T.block_until_ready()
         return T, Ci
 
     def oracle(self, nt: int) -> np.ndarray:
@@ -110,3 +112,16 @@ class Heat3D:
         """Bytes sent per device per halo update (6 faces, width 1)."""
         n = np.dtype(self.dtype).itemsize
         return 2 * n * (self.nx * self.ny + self.ny * self.nz + self.nx * self.nz)
+
+    # --- paper's T_eff convention --------------------------------------
+    def a_eff_per_step(self) -> int:
+        """Effective bytes per time step: T read+written, Ci read once —
+        ``(2 * 1 + 1) * n_cells * itemsize`` (identical to
+        ``bytes_per_step_per_cell * n_cells``)."""
+        n = int(np.prod(self.grid.global_shape))
+        return tele.a_eff(n, n_unknown_fields=1, n_known_fields=1,
+                          itemsize=np.dtype(self.dtype).itemsize)
+
+    def t_eff(self, t_step_s: float) -> float:
+        """T_eff in GB/s at a measured seconds-per-step."""
+        return tele.t_eff(self.a_eff_per_step(), t_step_s)

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core import init_global_grid
 from repro import solvers
+from repro import telemetry as tele
 from repro.solvers.multigrid import poisson_apply
 
 
@@ -137,6 +138,21 @@ class Poisson3D:
         return lam_min, lam_max
 
     # ------------------------------------------------------------------
+    # telemetry (paper's effective-memory-throughput convention)
+    # ------------------------------------------------------------------
+    def a_eff_per_iteration(self) -> int:
+        """Effective bytes per solver iteration: the unknown ``u`` is
+        read and written once, the known coefficient ``c`` and rhs ``b``
+        read once — ``(2 * 1 + 2) * n_cells * itemsize``."""
+        n = int(np.prod(self.grid.global_shape))
+        return tele.a_eff(n, n_unknown_fields=1, n_known_fields=2,
+                          itemsize=jnp.dtype(self.dtype).itemsize)
+
+    def t_eff(self, info) -> float:
+        """T_eff in GB/s for a recorded solve (NaN before timing)."""
+        return tele.t_eff(self.a_eff_per_iteration(), info.s_per_iter())
+
+    # ------------------------------------------------------------------
     # solves
     # ------------------------------------------------------------------
     def solve(self, method: str = "cg", tol: float = 1e-6,
@@ -146,6 +162,11 @@ class Poisson3D:
         ``overlap=True`` (cg/mgcg) switches the operator to the
         communication-hiding application.  Returns ``(u, info)``.
         """
+        with tele.region(f"poisson.solve.{method}",
+                         singular=self.singular, overlap=overlap):
+            return self._solve(method, tol, maxiter, overlap, **kw)
+
+    def _solve(self, method, tol, maxiter, overlap, **kw):
         apply_A = self.apply_A_overlap if overlap else self.apply_A
         project = "constant" if self.singular else None
         if method == "cg":

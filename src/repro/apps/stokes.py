@@ -54,6 +54,7 @@ from jax.sharding import PartitionSpec as P_
 from repro.core import boundary, init_global_grid
 from repro import fields
 from repro import solvers
+from repro import telemetry as tele
 from repro.fields import Field, FieldSet, ops
 from repro.solvers import reductions as red
 from repro.solvers.multigrid import (
@@ -317,10 +318,11 @@ class Stokes3D:
         :meth:`_precond`).
         """
         b = self._rhs(P) if P is not None else self.F
-        return solvers.cg(
-            self.grid, self.apply_A, b, x0=x0, tol=tol, maxiter=maxiter,
-            apply_M=self._precond(precond),
-            args=(self.eta,))
+        with tele.region("stokes.velocity_solve", precond=str(precond)):
+            return solvers.cg(
+                self.grid, self.apply_A, b, x0=x0, tol=tol, maxiter=maxiter,
+                apply_M=self._precond(precond),
+                args=(self.eta,))
 
     # ------------------------------------------------------------------
     # pressure-space helpers (host level, jitted shard_maps)
@@ -481,9 +483,27 @@ class Stokes3D:
         if method not in ("schur", "uzawa"):
             raise ValueError(f"unknown method {method!r}")
         inner_tol = max(tol * 1e-2, 1e-12) if inner_tol is None else inner_tol
-        if method == "uzawa":
-            return self._solve_uzawa(tol, outer_maxiter, inner_tol, precond)
-        return self._solve_schur(tol, outer_maxiter, inner_tol, precond)
+        with tele.region(f"stokes.solve.{method}", precond=str(precond)):
+            if method == "uzawa":
+                return self._solve_uzawa(tol, outer_maxiter, inner_tol,
+                                         precond)
+            return self._solve_schur(tol, outer_maxiter, inner_tol, precond)
+
+    # ------------------------------------------------------------------
+    # paper's T_eff convention
+    # ------------------------------------------------------------------
+    def a_eff_per_iteration(self) -> int:
+        """Effective bytes per inner (velocity-CG) iteration: the three
+        face velocity components are unknowns (read + written), the
+        viscosity and the three rhs components are knowns (read once) —
+        ``(2 * 3 + 4) * n_cells * itemsize``."""
+        n = int(np.prod(self.grid.global_shape))
+        return tele.a_eff(n, n_unknown_fields=3, n_known_fields=4,
+                          itemsize=np.dtype(self.dtype).itemsize)
+
+    def t_eff(self, info) -> float:
+        """T_eff in GB/s for a recorded velocity solve."""
+        return tele.t_eff(self.a_eff_per_iteration(), info.s_per_iter())
 
     def _solve_uzawa(self, tol, outer_maxiter, inner_tol, precond):
         V = FieldSet(vx=fields.zeros(self.grid, "xface", self.dtype),

@@ -54,6 +54,7 @@ import numpy as np
 from repro.core import init_global_grid
 from repro import fields as flds
 from repro import solvers
+from repro import telemetry as tele
 from repro.fields import Field, FieldSet
 from repro.stencil import fd3d as fd
 from .twophase_ops import darcy_flux, pressure_apply, pressure_rhs
@@ -268,11 +269,12 @@ class TwoPhase3D:
         if S is None:
             S = self.init_fields()
         infos = []
-        for _ in range(nt):
-            S, info = self.step(S)
-            if info is not None:
-                infos.append(info)
-        S.Pe.data.block_until_ready()
+        with tele.region("twophase.run", nt=nt, method=self.method):
+            for _ in range(nt):
+                S, info = self.step(S)
+                if info is not None:
+                    infos.append(info)
+            S.Pe.data.block_until_ready()
         return S, infos
 
     def fluxes(self, S: FieldSet) -> FieldSet:
@@ -380,3 +382,18 @@ class TwoPhase3D:
     def halo_bytes_per_step(self) -> int:
         n = np.dtype(self.dtype).itemsize
         return 2 * 2 * n * (self.nx * self.ny + self.ny * self.nz + self.nx * self.nz)
+
+    # ------------------------------------------------------------------
+    # paper's T_eff convention
+    # ------------------------------------------------------------------
+    def a_eff_per_step(self) -> int:
+        """Effective bytes per time step: ``Pe`` and ``phi`` are unknowns
+        (read + written); the nonlinear coefficients are derived from
+        them (not counted separately) — ``(2 * 2 + 0) * n * itemsize``."""
+        n = int(np.prod(self.grid.global_shape))
+        return tele.a_eff(n, n_unknown_fields=2, n_known_fields=0,
+                          itemsize=np.dtype(self.dtype).itemsize)
+
+    def t_eff(self, t_step_s: float) -> float:
+        """T_eff in GB/s at a measured seconds-per-step."""
+        return tele.t_eff(self.a_eff_per_step(), t_step_s)

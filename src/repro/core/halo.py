@@ -20,6 +20,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.telemetry.counters import record_halo as _record_halo
+
 from .locations import _STAGGER_DIM as _LOC_STAGGER_DIM
 from .topology import CartesianTopology
 
@@ -102,6 +104,11 @@ def update_halo(
         for d in dims:
             if topo.dims[d] == 1 and not topo.periodic[d]:
                 continue  # nothing to exchange
+            # Telemetry hook: a pure trace-time Python side effect (no-op
+            # unless a counting collector is active) — the lowered program
+            # is identical with or without it.
+            _record_halo(A.shape, d + off, width,
+                         jnp.dtype(A.dtype).itemsize)
             A = _update_one_dim(topo, A, d, d + off, width)
         out.append(A)
     return out[0] if len(out) == 1 else tuple(out)

@@ -26,12 +26,15 @@ is identical to a single-device solve of the true global system.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import telemetry as tele
 from repro.core.grid import ImplicitGlobalGrid
 from repro.core.locations import is_field_node as _is_field_node
 from . import reductions as red
@@ -39,11 +42,31 @@ from . import reductions as red
 
 @dataclasses.dataclass
 class SolveInfo:
-    """Outcome of an iterative solve (host-side scalars)."""
+    """Outcome of an iterative solve (host-side scalars + telemetry).
+
+    ``residuals[j]`` is the RELATIVE residual after iteration ``j + 1``
+    (device-recorded inside the solve loop's carry — no extra host syncs;
+    its last entry equals ``relres``).  ``wall_s`` is the host wall time
+    of the solve call, synced on the results (the first call for a given
+    shape/operator includes compile time — benchmarks warm up first).
+    ``comm`` (populated when a :mod:`repro.telemetry` session is active)
+    is the exact per-solve communication split: halo exchanges/bytes per
+    dim and all-reduce counts, setup vs per-iteration.
+    """
 
     iterations: int
     relres: float
     converged: bool
+    residuals: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0))
+    wall_s: float | None = None
+    comm: "tele.CommStats | None" = None
+
+    def s_per_iter(self) -> float:
+        """Wall seconds per iteration (NaN before timing is recorded)."""
+        if self.wall_s is None or self.iterations <= 0:
+            return float("nan")
+        return self.wall_s / self.iterations
 
 
 def _tmap(fn, *trees):
@@ -183,35 +206,53 @@ def cg(
         p = z
         rz = mdot(r, z)
         res = jnp.sqrt(mdot(r, r))
+        # Per-iteration relative-residual history, recorded into the
+        # while_loop carry (device-side buffer; ONE transfer at the end,
+        # no per-iteration host syncs).
+        hist0 = jnp.zeros((maxiter,), res.dtype)
 
         def cond(carry):
-            _, _, _, _, res, k = carry
+            _, _, _, _, res, k, _ = carry
             return (res > tol * bnorm) & (k < maxiter)
 
         def body(carry):
-            x, r, p, rz, _, k = carry
-            Ap = masked(apply_A(p, *ops))
-            alpha = rz / mdot(p, Ap)
-            x = _tmap(lambda xi, pi: xi + alpha.astype(xi.dtype) * pi, x, p)
-            r = _tmap(lambda ri, ai: ri - alpha.astype(ri.dtype) * ai, r, Ap)
-            z = project(masked(M(r))) if M is not None else project(r)
-            rz_new = mdot(r, z)
-            beta = rz_new / rz
-            p = _tmap(lambda zi, pi: zi + beta.astype(zi.dtype) * pi, z, p)
-            # unpreconditioned: rz_new IS <r, r>; skip the third all-reduce
-            res = jnp.sqrt(mdot(r, r)) if M is not None \
-                else jnp.sqrt(rz_new)
-            return x, r, p, rz_new, res, k + 1
+            x, r, p, rz, _, k, hist = carry
+            # tele.tag is a trace-time bucket marker for the comm
+            # counters (see repro.telemetry.counters) — pure Python, no
+            # effect on the lowered program.
+            with tele.tag("iteration"):
+                Ap = masked(apply_A(p, *ops))
+                alpha = rz / mdot(p, Ap)
+                x = _tmap(lambda xi, pi: xi + alpha.astype(xi.dtype) * pi, x, p)
+                r = _tmap(lambda ri, ai: ri - alpha.astype(ri.dtype) * ai, r, Ap)
+                z = project(masked(M(r))) if M is not None else project(r)
+                rz_new = mdot(r, z)
+                beta = rz_new / rz
+                p = _tmap(lambda zi, pi: zi + beta.astype(zi.dtype) * pi, z, p)
+                # unpreconditioned: rz_new IS <r, r>; skip the third all-reduce
+                res = jnp.sqrt(mdot(r, r)) if M is not None \
+                    else jnp.sqrt(rz_new)
+                hist = jax.lax.dynamic_update_index_in_dim(
+                    hist, (res / bnorm).astype(hist.dtype), k, 0)
+            return x, r, p, rz_new, res, k + 1, hist
 
-        x, _, _, _, res, k = jax.lax.while_loop(
-            cond, body, (x, r, p, rz, res, jnp.zeros((), jnp.int32))
+        x, _, _, _, res, k, hist = jax.lax.while_loop(
+            cond, body, (x, r, p, rz, res, jnp.zeros((), jnp.int32), hist0)
         )
         # Return the mean-zero representative of a singular solve, and
         # refresh the seam halo cells of x (never written by the masked
         # updates) so gather() sees the solution everywhere.
         x = project(x)
         x = _tmap(lambda a: grid.update_halo(a), x)
-        return x, k, res / bnorm
+        return x, k, res / bnorm, hist
+
+    def _build():
+        return jax.shard_map(
+            _local, mesh=grid.mesh,
+            in_specs=(grid.spec, grid.spec) + tuple(grid.spec for _ in args),
+            out_specs=(grid.spec, P(), P(), P()),
+            check_vma=False,
+        )
 
     # One compiled program per (operator, tolerances, structure/shapes):
     # reuse the grid's executable cache so repeat solves skip retracing
@@ -219,13 +260,22 @@ def cg(
     key = ("solvers.cg", apply_A, apply_M, tol, maxiter, project_nullspace,
            _sig(b), tuple(_sig(a) for a in args))
     if key not in grid._jit_cache:
-        sm = jax.shard_map(
-            _local, mesh=grid.mesh,
-            in_specs=(grid.spec, grid.spec) + tuple(grid.spec for _ in args),
-            out_specs=(grid.spec, P(), P()),
-            check_vma=False,
-        )
-        grid._jit_cache[key] = jax.jit(sm)
-    x, k, relres = grid._jit_cache[key](b, x0, *args)
-    k, relres = int(k), float(relres)
-    return x, SolveInfo(iterations=k, relres=relres, converged=relres <= tol)
+        grid._jit_cache[key] = jax.jit(_build())
+
+    # Comm counts come from ONE abstract re-trace (jax.eval_shape — no
+    # device work), cached alongside the executable so repeat telemetry
+    # runs pay nothing.
+    comm = None
+    if tele.enabled():
+        ckey = ("solvers.cg.comm",) + key[1:]
+        if ckey not in grid._jit_cache:
+            grid._jit_cache[ckey] = tele.count_comm(_build(), b, x0, *args)
+        comm = grid._jit_cache[ckey]
+
+    t0 = time.perf_counter()
+    x, k, relres, hist = grid._jit_cache[key](b, x0, *args)
+    k, relres = int(k), float(relres)   # blocks until the solve is done
+    wall = time.perf_counter() - t0
+    return x, SolveInfo(iterations=k, relres=relres, converged=relres <= tol,
+                        residuals=np.asarray(hist)[:k], wall_s=wall,
+                        comm=comm)

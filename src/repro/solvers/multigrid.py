@@ -52,10 +52,14 @@ local-view closure — e.g. as the preconditioner inside
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import telemetry as tele
 from repro.core import hide as _hide
 from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
@@ -636,36 +640,55 @@ def multigrid_solve(
         r0 = residual(0, x, b)
         res0 = jnp.sqrt(red.dot(grid, r0, r0, mask))
 
+        hist0 = jnp.zeros((maxiter,), res0.dtype)
+
         def cond(carry):
-            _, res, k = carry
+            _, res, k, _ = carry
             return (res > tol * bnorm) & (k < maxiter)
 
         def body(carry):
-            x, _, k = carry
-            x = v_cycle(0, x, b)
-            r = residual(0, x, b)
-            res = jnp.sqrt(red.dot(grid, r, r, mask))
-            return x, res, k + 1
+            x, _, k, hist = carry
+            with tele.tag("iteration"):
+                x = v_cycle(0, x, b)
+                r = residual(0, x, b)
+                res = jnp.sqrt(red.dot(grid, r, r, mask))
+                hist = jax.lax.dynamic_update_index_in_dim(
+                    hist, (res / bnorm).astype(hist.dtype), k, 0)
+            return x, res, k + 1, hist
 
-        x, res, k = jax.lax.while_loop(
-            cond, body, (x, res0, jnp.zeros((), jnp.int32))
+        x, res, k, hist = jax.lax.while_loop(
+            cond, body, (x, res0, jnp.zeros((), jnp.int32), hist0)
         )
         if singular:
             x = grid.update_halo(demean(x))
-        return x, k, res / bnorm
+        return x, k, res / bnorm, hist
+
+    def _build():
+        return jax.shard_map(
+            _local, mesh=grid.mesh,
+            in_specs=(grid.spec, grid.spec, grid.spec),
+            out_specs=(grid.spec, P(), P(), P()),
+            check_vma=False,
+        )
 
     key = ("solvers.mg", loc, tol, maxiter, nu_pre, nu_post, omega,
            coarse_sweeps, max_levels, smoother, spacing, b.shape, b.dtype)
     if key not in grid._jit_cache:
-        sm = jax.shard_map(
-            _local, mesh=grid.mesh,
-            in_specs=(grid.spec, grid.spec, grid.spec),
-            out_specs=(grid.spec, P(), P()),
-            check_vma=False,
-        )
-        grid._jit_cache[key] = jax.jit(sm)
-    x, k, relres = grid._jit_cache[key](b, c, x0)
+        grid._jit_cache[key] = jax.jit(_build())
+
+    comm = None
+    if tele.enabled():
+        ckey = ("solvers.mg.comm",) + key[1:]
+        if ckey not in grid._jit_cache:
+            grid._jit_cache[ckey] = tele.count_comm(_build(), b, c, x0)
+        comm = grid._jit_cache[ckey]
+
+    t0 = time.perf_counter()
+    x, k, relres, hist = grid._jit_cache[key](b, c, x0)
     k, relres = int(k), float(relres)
+    wall = time.perf_counter() - t0
     if wrap is not None:
         x = wrap(x)
-    return x, SolveInfo(iterations=k, relres=relres, converged=relres <= tol)
+    return x, SolveInfo(iterations=k, relres=relres, converged=relres <= tol,
+                        residuals=np.asarray(hist)[:k], wall_s=wall,
+                        comm=comm)

@@ -27,12 +27,14 @@ device-side into a preallocated buffer.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import telemetry as tele
 from repro.core.grid import ImplicitGlobalGrid
 from . import reductions as red
 from .cg import SolveInfo
@@ -40,7 +42,11 @@ from .cg import SolveInfo
 
 @dataclasses.dataclass
 class PTInfo(SolveInfo):
-    """Solve outcome plus the per-iteration residual-norm history."""
+    """Solve outcome plus the per-iteration residual-norm history.
+
+    NOTE: unlike the base ``SolveInfo``, ``residuals`` here are ABSOLUTE
+    global residual L2 norms (the PT literature convention), not relative
+    ones."""
 
     residuals: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0)
@@ -98,12 +104,13 @@ def pseudo_transient(
             # r (the residual at x) is carried, so the operator — a full
             # halo exchange + stencil — runs exactly once per iteration.
             x, v, r, _, k, hist = carry
-            v = beta * v + alpha * r
-            x = x + v
-            r = (b - apply_A(x, *ops)) * mi
-            res = jnp.sqrt(red.dot(grid, r, r, mask))
-            hist = jax.lax.dynamic_update_index_in_dim(
-                hist, res.astype(hist.dtype), k, 0)
+            with tele.tag("iteration"):
+                v = beta * v + alpha * r
+                x = x + v
+                r = (b - apply_A(x, *ops)) * mi
+                res = jnp.sqrt(red.dot(grid, r, r, mask))
+                hist = jax.lax.dynamic_update_index_in_dim(
+                    hist, res.astype(hist.dtype), k, 0)
             return x, v, r, res, k + 1, hist
 
         x, _, _, res, k, hist = jax.lax.while_loop(
@@ -112,19 +119,31 @@ def pseudo_transient(
         )
         return grid.update_halo(x), k, res / bnorm, hist
 
-    key = ("solvers.pt", apply_A, alpha, beta, tol, maxiter,
-           b.shape, b.dtype, tuple((a.shape, a.dtype) for a in args))
-    if key not in grid._jit_cache:
-        sm = jax.shard_map(
+    def _build():
+        return jax.shard_map(
             _local, mesh=grid.mesh,
             in_specs=(grid.spec, grid.spec) + tuple(grid.spec for _ in args),
             out_specs=(grid.spec, P(), P(), P()),
             check_vma=False,
         )
-        grid._jit_cache[key] = jax.jit(sm)
+
+    key = ("solvers.pt", apply_A, alpha, beta, tol, maxiter,
+           b.shape, b.dtype, tuple((a.shape, a.dtype) for a in args))
+    if key not in grid._jit_cache:
+        grid._jit_cache[key] = jax.jit(_build())
+
+    comm = None
+    if tele.enabled():
+        ckey = ("solvers.pt.comm",) + key[1:]
+        if ckey not in grid._jit_cache:
+            grid._jit_cache[ckey] = tele.count_comm(_build(), b, x0, *args)
+        comm = grid._jit_cache[ckey]
+
+    t0 = time.perf_counter()
     x, k, relres, hist = grid._jit_cache[key](b, x0, *args)
     k, relres = int(k), float(relres)
+    wall = time.perf_counter() - t0
     return x, PTInfo(
         iterations=k, relres=relres, converged=relres <= tol,
-        residuals=np.asarray(hist)[:k],
+        residuals=np.asarray(hist)[:k], wall_s=wall, comm=comm,
     )

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
 from repro.core.topology import CartesianTopology
+from repro.telemetry.counters import record_all_reduce as _record_all_reduce
 
 
 def grid_axes(topo: CartesianTopology) -> tuple[str, ...]:
@@ -41,19 +42,34 @@ def grid_axes(topo: CartesianTopology) -> tuple[str, ...]:
     return tuple(ax for ax in topo.axes if ax is not None)
 
 
+# The three wrappers below are the ONLY all-reduce call sites of the
+# solver stack, so the telemetry hook here counts every convergence-test
+# and dot-product reduction of a solve.  The hook is a trace-time Python
+# side effect (no-op unless a counting collector is active): the lowered
+# program is identical with telemetry on or off.
+
 def psum(topo: CartesianTopology, x):
     axes = grid_axes(topo)
-    return jax.lax.psum(x, axes) if axes else x
+    if not axes:
+        return x
+    _record_all_reduce(getattr(x, "size", 1))
+    return jax.lax.psum(x, axes)
 
 
 def pmax(topo: CartesianTopology, x):
     axes = grid_axes(topo)
-    return jax.lax.pmax(x, axes) if axes else x
+    if not axes:
+        return x
+    _record_all_reduce(getattr(x, "size", 1))
+    return jax.lax.pmax(x, axes)
 
 
 def pmin(topo: CartesianTopology, x):
     axes = grid_axes(topo)
-    return jax.lax.pmin(x, axes) if axes else x
+    if not axes:
+        return x
+    _record_all_reduce(getattr(x, "size", 1))
+    return jax.lax.pmin(x, axes)
 
 
 def acc_dtype(dtype):

@@ -1,0 +1,195 @@
+"""Trace-time communication counters (zero device cost).
+
+The instrumented call sites — :func:`repro.core.halo.update_halo` and
+the ``psum``/``pmax``/``pmin`` all-reduces of
+:mod:`repro.solvers.reductions` — run *inside* traced code: they execute
+as Python exactly once per trace, not once per device step.  The
+counters exploit that: they are plain Python side effects that fire
+during tracing and are invisible to XLA, so the lowered program is
+bit-identical with counting on or off.
+
+To count a compiled solve exactly, re-trace it abstractly under a
+collector (:func:`count_comm` wraps ``jax.eval_shape`` — no device
+touches, milliseconds of host work).  Loop bodies are disambiguated by
+the :func:`tag` context the solvers place inside their
+``lax.while_loop`` body: counts recorded under ``tag("iteration")`` land
+in the per-iteration bucket, everything else is setup.  Per-solve totals
+are then ``setup + per_iteration * iterations`` with the measured
+iteration count — exact, because one compiled iteration performs exactly
+what its single trace recorded.
+
+All byte counts are PER RANK: each rank sends ``2 * halo * prod(face) *
+itemsize`` bytes per exchanged dim (both directions), the analytic
+halo-volume formula the tests validate against.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+
+
+@dataclasses.dataclass
+class CounterSnapshot:
+    """Communication counts of one bucket (setup, or one loop iteration)."""
+
+    halo_exchanges: int = 0          # per-dim, per-array exchange events
+    halo_bytes: int = 0              # bytes sent per rank (both directions)
+    halo_per_dim: dict = dataclasses.field(default_factory=dict)
+    all_reduces: int = 0             # psum/pmax/pmin calls
+    all_reduce_scalars: int = 0      # scalars carried by those reductions
+
+    def add_halo(self, dim: int, nbytes: int):
+        self.halo_exchanges += 1
+        self.halo_bytes += nbytes
+        d = self.halo_per_dim.setdefault(dim, {"exchanges": 0, "bytes": 0})
+        d["exchanges"] += 1
+        d["bytes"] += nbytes
+
+    def add_all_reduce(self, scalars: int):
+        self.all_reduces += 1
+        self.all_reduce_scalars += scalars
+
+    def scaled_sum(self, other: "CounterSnapshot", factor: int) -> "CounterSnapshot":
+        """``self + factor * other`` (for setup + iters * per_iteration)."""
+        out = CounterSnapshot(
+            halo_exchanges=self.halo_exchanges + factor * other.halo_exchanges,
+            halo_bytes=self.halo_bytes + factor * other.halo_bytes,
+            all_reduces=self.all_reduces + factor * other.all_reduces,
+            all_reduce_scalars=(self.all_reduce_scalars
+                                + factor * other.all_reduce_scalars),
+        )
+        for src, mult in ((self.halo_per_dim, 1), (other.halo_per_dim, factor)):
+            for dim, d in src.items():
+                o = out.halo_per_dim.setdefault(dim, {"exchanges": 0, "bytes": 0})
+                o["exchanges"] += mult * d["exchanges"]
+                o["bytes"] += mult * d["bytes"]
+        return out
+
+    def as_dict(self) -> dict:
+        return {
+            "halo_exchanges": self.halo_exchanges,
+            "halo_bytes": self.halo_bytes,
+            "halo_per_dim": {str(k): dict(v)
+                             for k, v in sorted(self.halo_per_dim.items())},
+            "all_reduces": self.all_reduces,
+            "all_reduce_scalars": self.all_reduce_scalars,
+        }
+
+
+@dataclasses.dataclass
+class CommStats:
+    """Per-solve communication stats attached to ``SolveInfo.comm``.
+
+    ``setup`` covers everything outside the solver's iteration loop
+    (initial residual, preconditioner setup, final halo refresh);
+    ``per_iteration`` is one loop body.  ``totals(k)`` gives the whole
+    solve at ``k`` iterations.
+    """
+
+    setup: CounterSnapshot
+    per_iteration: CounterSnapshot
+
+    def totals(self, iterations: int) -> CounterSnapshot:
+        return self.setup.scaled_sum(self.per_iteration, int(iterations))
+
+    def as_dict(self, iterations: int | None = None) -> dict:
+        out = {"setup": self.setup.as_dict(),
+               "per_iteration": self.per_iteration.as_dict()}
+        if iterations is not None:
+            out["totals"] = self.totals(iterations).as_dict()
+            out["iterations"] = int(iterations)
+        return out
+
+
+class _Collector:
+    __slots__ = ("buckets", "tags")
+
+    def __init__(self):
+        self.buckets: dict[str, CounterSnapshot] = {"setup": CounterSnapshot()}
+        self.tags: list[str] = []
+
+    def bucket(self) -> CounterSnapshot:
+        name = self.tags[-1] if self.tags else "setup"
+        return self.buckets.setdefault(name, CounterSnapshot())
+
+    def stats(self) -> CommStats:
+        return CommStats(
+            setup=self.buckets.get("setup", CounterSnapshot()),
+            per_iteration=self.buckets.get("iteration", CounterSnapshot()),
+        )
+
+
+_STACK: list[_Collector] = []
+
+
+def counting_enabled() -> bool:
+    """True while a :func:`counting` collector is active."""
+    return bool(_STACK)
+
+
+@contextlib.contextmanager
+def counting():
+    """Collect comm counts from every instrumented call traced inside."""
+    col = _Collector()
+    _STACK.append(col)
+    try:
+        yield col
+    finally:
+        _STACK.remove(col)
+
+
+@contextlib.contextmanager
+def tag(name: str):
+    """Trace-time bucket tag (solvers wrap their loop bodies in
+    ``tag("iteration")``).  No-op when no collector is active.  Counts
+    land in the INNERMOST collector only, so a solver counting itself
+    never double-reports into an enclosing collector."""
+    if not _STACK:
+        yield
+        return
+    col = _STACK[-1]
+    col.tags.append(name)
+    try:
+        yield
+    finally:
+        col.tags.remove(name)
+
+
+def halo_slab_bytes(shape, dim: int, width: int, itemsize: int) -> int:
+    """Bytes one rank sends along ``dim``: the analytic halo volume
+    ``2 (directions) * width * prod(face extents) * itemsize``."""
+    face = math.prod(n for d, n in enumerate(shape) if d != dim)
+    return 2 * int(width) * int(face) * int(itemsize)
+
+
+def record_halo(shape, dim: int, width: int, itemsize: int):
+    """Hook for :func:`repro.core.halo.update_halo` (one array, one dim)."""
+    if not _STACK:
+        return
+    nbytes = halo_slab_bytes(shape, dim, width, itemsize)
+    _STACK[-1].bucket().add_halo(dim, nbytes)
+
+
+def record_all_reduce(scalars: int = 1):
+    """Hook for the global reductions (psum/pmax/pmin call sites)."""
+    if not _STACK:
+        return
+    _STACK[-1].bucket().add_all_reduce(int(scalars))
+
+
+def count_comm(fn, *args) -> CommStats:
+    """Comm counts of one abstract trace of ``fn(*args)``.
+
+    ``fn`` is a traceable callable (e.g. a freshly built ``shard_map``
+    local function); ``args`` may be concrete arrays or
+    ``jax.ShapeDtypeStruct``s — ``jax.eval_shape`` never touches device
+    data.  Returns the ``setup`` / ``per_iteration`` split (see
+    :func:`tag`).
+    """
+    import jax
+
+    with counting() as col:
+        jax.eval_shape(fn, *args)
+    return col.stats()

@@ -1,0 +1,40 @@
+"""The paper's effective-memory-throughput metric.
+
+Iterative stencil codes are memory-bound, so the honest figure of merit
+is not FLOP/s but how fast the *necessary* data moves:
+
+    T_eff = A_eff / t_it
+
+where ``A_eff`` is the effective memory access per iteration under the
+paper's convention
+
+    A_eff = (2 * D_u + D_k) * n_cells * itemsize
+
+— every *unknown* field (updated each iteration) must be read and
+written once (factor 2), every *known* field (coefficients, right-hand
+sides) read once; halo duplicates, temporaries and any extra traffic a
+given implementation incurs are deliberately NOT counted.  ``T_eff``
+therefore lower-bounds the achieved memory throughput: an implementation
+reaching the hardware's peak memory bandwidth in T_eff performs no
+redundant memory traffic at all.
+
+Each app declares its own ``D_u``/``D_k`` (see ``a_eff_per_iteration``
+on :class:`repro.apps.poisson.Poisson3D` and friends); benchmarks report
+``t_eff(a_eff, t_it)`` in GB/s next to every wall time.
+"""
+
+from __future__ import annotations
+
+
+def a_eff(n_cells: int, n_unknown_fields: int, n_known_fields: int,
+          itemsize: int) -> int:
+    """Effective bytes moved per iteration: ``(2 D_u + D_k) * n * size``."""
+    return (2 * int(n_unknown_fields) + int(n_known_fields)) \
+        * int(n_cells) * int(itemsize)
+
+
+def t_eff(a_eff_bytes: float, t_it_s: float) -> float:
+    """Effective memory throughput in GB/s (paper convention)."""
+    if t_it_s <= 0:
+        return float("nan")
+    return float(a_eff_bytes) / float(t_it_s) / 1e9

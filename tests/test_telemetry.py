@@ -1,0 +1,324 @@
+"""Telemetry subsystem: trace-time comm counters validated against the
+analytic halo-volume formula and CG's known all-reduce structure,
+device-recorded residual histories, zero-cost-when-disabled (identical
+lowered HLO), and sink serialization."""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from _mp import run
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+# ---------------------------------------------------------------------------
+# pure-Python units (no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_halo_slab_bytes_formula():
+    """halo_slab_bytes is the analytic 2 * h * prod(face) * itemsize."""
+    from repro.telemetry import halo_slab_bytes
+
+    shape = (10, 14, 18)
+    for dim in range(3):
+        face = np.prod([n for d, n in enumerate(shape) if d != dim])
+        for width, itemsize in ((1, 8), (2, 4)):
+            assert halo_slab_bytes(shape, dim, width, itemsize) \
+                == 2 * width * face * itemsize
+
+
+def test_counter_snapshot_arithmetic():
+    from repro.telemetry import CommStats
+    from repro.telemetry.counters import CounterSnapshot
+
+    setup = CounterSnapshot()
+    setup.add_halo(0, 100)
+    setup.add_all_reduce(3)
+    per_it = CounterSnapshot()
+    per_it.add_halo(0, 100)
+    per_it.add_halo(1, 40)
+    per_it.add_all_reduce(1)
+    per_it.add_all_reduce(1)
+
+    tot = CommStats(setup, per_it).totals(10)
+    assert tot.halo_exchanges == 1 + 10 * 2
+    assert tot.halo_bytes == 100 + 10 * 140
+    assert tot.all_reduces == 1 + 10 * 2
+    assert tot.all_reduce_scalars == 3 + 10 * 2
+    assert tot.halo_per_dim[0] == {"exchanges": 11, "bytes": 1100}
+    assert tot.halo_per_dim[1] == {"exchanges": 10, "bytes": 400}
+    # round-trips through as_dict (json-serializable)
+    json.dumps(CommStats(setup, per_it).as_dict(iterations=10))
+
+
+def test_tag_innermost_collector_only():
+    """A nested collector absorbs counts; the outer one stays clean."""
+    from repro.telemetry.counters import counting, record_all_reduce, tag
+
+    with counting() as outer:
+        record_all_reduce(1)
+        with counting() as inner:
+            with tag("iteration"):
+                record_all_reduce(1)
+        record_all_reduce(1)
+    assert outer.stats().setup.all_reduces == 2
+    assert outer.stats().per_iteration.all_reduces == 0
+    assert inner.stats().per_iteration.all_reduces == 1
+
+
+def test_a_eff_t_eff():
+    from repro.telemetry import a_eff, t_eff
+
+    # heat: T unknown, Ci known, f32 -> 3 bytes/cell/step
+    assert a_eff(100, 1, 1, 4) == 3 * 100 * 4
+    assert t_eff(2e9, 1.0) == 2.0
+    assert np.isnan(t_eff(1.0, 0.0))
+
+
+def test_sinks_serialize():
+    from repro.telemetry import MemorySink, NullSink, session, region, metric
+
+    NullSink().emit({"type": "span"})  # never raises, never stores
+
+    sink = MemorySink()
+    with session(sink=sink):
+        with region("outer", label="x"):
+            with region("inner"):
+                pass
+            metric("t_eff_gbs", 12.5)
+    kinds = [e["type"] for e in sink.events]
+    assert kinds == ["span", "metric", "span"]  # inner closes first
+    ct = sink.chrome_trace_events()
+    assert [e["ph"] for e in ct] == ["X", "i", "X"]
+    for e in ct:
+        json.dumps(e)
+    spans = [e for e in ct if e["ph"] == "X"]
+    assert all(e["dur"] >= 0 for e in spans)
+    inner, = (e for e in spans if e["name"] == "inner")
+    outer, = (e for e in spans if e["name"] == "outer")
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+
+
+def test_region_noop_without_session():
+    from repro.telemetry import current_session, enabled, region
+
+    assert not enabled() and current_session() is None
+    with region("nothing"):
+        pass  # must not raise, must not require a session
+
+
+def test_session_is_reentrant():
+    """An inner ``session()`` joins the active one (benchmark harnesses
+    open their own session yet compose under ``benchmarks/run.py``'s)."""
+    from repro.telemetry import MemorySink, current_session, session
+
+    outer_sink = MemorySink()
+    with session(sink=outer_sink) as outer:
+        with session(sink=MemorySink()) as inner:  # inner sink ignored
+            assert inner is outer
+            inner.metric("nested", 1.0)
+        assert current_session() is outer  # inner exit must not tear down
+    assert current_session() is None
+    assert [e["name"] for e in outer_sink.events] == ["nested"]
+
+
+# ---------------------------------------------------------------------------
+# distributed (subprocess, 8 fake devices)
+# ---------------------------------------------------------------------------
+
+def test_halo_bytes_match_analytic_formula():
+    """Counted bytes of one update_halo == analytic formula per dim, for
+    center and face locations, widths 1 and 2."""
+    out = run("""
+        jax.config.update("jax_enable_x64", True)
+        from jax.sharding import PartitionSpec as P
+        from repro.core import init_global_grid
+        from repro.telemetry import counting, halo_slab_bytes
+
+        g = init_global_grid(10, 12, 14, dims=(2, 2, 2))
+
+        def one(A):
+            return g.update_halo(A)
+
+        sm = jax.shard_map(one, mesh=g.mesh, in_specs=(g.spec,),
+                           out_specs=g.spec, check_vma=False)
+        A = g.zeros()
+        with counting() as col:
+            jax.eval_shape(sm, A)
+        snap = col.stats().setup
+        local = g.local_shape
+        item = jnp.dtype(g.dtype).itemsize
+        assert snap.halo_exchanges == 3, snap.halo_exchanges
+        for d in range(3):
+            want = halo_slab_bytes(local, d, g.halo, item)
+            got = snap.halo_per_dim[d]["bytes"]
+            assert got == want, (d, got, want)
+        assert snap.halo_bytes == sum(
+            halo_slab_bytes(local, d, g.halo, item) for d in range(3))
+
+        # a face-located field counts identically (shape-uniform staggering)
+        from repro import fields
+        F = fields.zeros(g, "xface")
+        def onef(F):
+            return fields.update_halo(g, F)
+        smf = jax.shard_map(onef, mesh=g.mesh, in_specs=(g.spec,),
+                            out_specs=g.spec, check_vma=False)
+        with counting() as colf:
+            jax.eval_shape(smf, F)
+        assert colf.stats().setup.halo_bytes == snap.halo_bytes
+
+        # width-2 exchange scales bytes by 2
+        g2 = init_global_grid(10, 12, 14, dims=(2, 2, 2), overlap=4)
+        def two(A):
+            return g2.update_halo(A)
+        sm2 = jax.shard_map(two, mesh=g2.mesh, in_specs=(g2.spec,),
+                            out_specs=g2.spec, check_vma=False)
+        with counting() as col2:
+            jax.eval_shape(sm2, g2.zeros())
+        snap2 = col2.stats().setup
+        for d in range(3):
+            assert snap2.halo_per_dim[d]["bytes"] == \
+                halo_slab_bytes(g2.local_shape, d, 2, item)
+        print("ok")
+    """)
+    assert "ok" in out
+
+
+def test_cg_all_reduce_and_residual_history():
+    """Plain CG: exactly 2 all-reduces and 1 halo exchange per dim per
+    iteration; residuals device-recorded, last == relres, monotone-ish."""
+    out = run("""
+        jax.config.update("jax_enable_x64", True)
+        from repro import telemetry as tele
+        from repro.apps.poisson import Poisson3D
+
+        app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+        with tele.session():
+            x, info = app.solve(method="cg", tol=1e-8)
+        c = info.comm
+        assert c is not None
+        # CG's known structure: alpha denominator + rz_new (res reuses
+        # rz_new for the unpreconditioned method)
+        assert c.per_iteration.all_reduces == 2, c.per_iteration.all_reduces
+        # one operator application -> one halo update -> 3 dims
+        assert c.per_iteration.halo_exchanges == 3
+        # setup: bnorm + rz + res0, initial apply_A + final halo refresh
+        assert c.setup.all_reduces == 3, c.setup.all_reduces
+        assert c.setup.halo_exchanges == 6
+
+        r = info.residuals
+        assert len(r) == info.iterations
+        assert np.isclose(r[-1], info.relres)
+        assert np.all(r > 0)
+        # monotone-ish: CG residuals may wiggle, but never explode
+        assert np.all(np.diff(np.log(r)) < 2.0)
+        assert r[-1] < r[0]
+
+        # preconditioned CG adds the explicit <r, r> reduction
+        with tele.session():
+            x, info2 = app.solve(method="mgcg", tol=1e-8)
+        assert info2.comm.per_iteration.all_reduces == 3
+        assert np.isclose(info2.residuals[-1], info2.relres)
+
+        # wall clock recorded and sane
+        assert info.wall_s is not None and info.wall_s > 0
+        assert info.s_per_iter() > 0
+        print("ok")
+    """)
+    assert "ok" in out
+
+
+def test_comm_totals_and_repeat_solves_cached():
+    """totals() = setup + k * per_iteration; the comm re-trace is cached
+    so a repeat solve reuses the same CommStats object."""
+    out = run("""
+        jax.config.update("jax_enable_x64", True)
+        from repro import telemetry as tele
+        from repro.apps.poisson import Poisson3D
+
+        app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+        with tele.session():
+            _, a = app.solve(method="cg", tol=1e-8)
+            _, b = app.solve(method="cg", tol=1e-8)
+        assert a.comm is b.comm  # cached in grid._jit_cache
+        tot = a.comm.totals(a.iterations)
+        assert tot.all_reduces == 3 + 2 * a.iterations
+        assert tot.halo_exchanges == 6 + 3 * a.iterations
+        print("ok")
+    """)
+    assert "ok" in out
+
+
+def test_zero_cost_when_disabled():
+    """The lowered HLO of a solve is bit-identical with telemetry on or
+    off, and an active session adds no jit traces on the hot solve path."""
+    out = run("""
+        jax.config.update("jax_enable_x64", True)
+        from jax.sharding import PartitionSpec as P
+        from repro import telemetry as tele
+        from repro.core import init_global_grid
+        from repro.solvers import reductions as red
+
+        g = init_global_grid(10, 10, 10, dims=(2, 2, 2))
+
+        def work(A):
+            A = g.update_halo(A)
+            return red.psum(g.topo, jnp.sum(A))
+
+        def lower():
+            sm = jax.shard_map(work, mesh=g.mesh, in_specs=(g.spec,),
+                               out_specs=P(), check_vma=False)
+            return jax.jit(sm).lower(g.zeros()).as_text()
+
+        plain = lower()
+        with tele.session():
+            with tele.counting():
+                instrumented = lower()
+        assert plain == instrumented, "telemetry changed the lowered HLO"
+
+        # no extra traces on repeat instrumented solves: the same compiled
+        # executable and the cached CommStats are reused
+        from repro.apps.poisson import Poisson3D
+        app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+        app.solve(method="cg", tol=1e-8)          # warm up (compile)
+        n0 = len(app.grid._jit_cache)
+        with tele.session():
+            app.solve(method="cg", tol=1e-8)      # adds ONE comm entry
+            n1 = len(app.grid._jit_cache)
+            app.solve(method="cg", tol=1e-8)      # adds nothing
+            n2 = len(app.grid._jit_cache)
+        assert n1 == n0 + 1 and n2 == n1, (n0, n1, n2)
+        print("ok")
+    """)
+    assert "ok" in out
+
+
+def test_multigrid_and_pt_histories():
+    """mg and pt records: history length == iterations; mg's last entry
+    is the relative residual; pt keeps its absolute-norm convention."""
+    out = run("""
+        jax.config.update("jax_enable_x64", True)
+        from repro import telemetry as tele
+        from repro.apps.poisson import Poisson3D
+
+        app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+        with tele.session():
+            _, mg = app.solve(method="mg", tol=1e-8)
+            _, pt = app.solve(method="pt", tol=1e-8)
+        assert len(mg.residuals) == mg.iterations
+        assert np.isclose(mg.residuals[-1], mg.relres)
+        assert mg.comm.per_iteration.all_reduces >= 1
+        assert mg.comm.per_iteration.halo_exchanges > 3  # V-cycle levels
+
+        assert len(pt.residuals) == pt.iterations
+        assert pt.residuals[-1] < pt.residuals[0]   # absolute norms
+        assert pt.comm.per_iteration.all_reduces == 1
+        assert pt.comm.per_iteration.halo_exchanges == 3
+        print("ok")
+    """)
+    assert "ok" in out
