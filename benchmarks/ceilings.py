@@ -16,6 +16,12 @@ bounds for the 2-rank CI run too.
 ``check(results)`` takes the ``results`` dict of ``benchmarks/run.py``
 (harness name -> harness return value) and returns a list of violation
 strings (empty when everything is within bounds).
+
+Iteration ceilings gate the ALGORITHM; the companion
+``benchmarks/compare.py`` gates the PERFORMANCE TRAJECTORY — it diffs
+the run's T_eff and counted halo bytes against the previous
+``BENCH_<pr>.json`` recording (same-config runs only).  ``run.py
+--check-ceilings`` applies both.
 """
 
 from __future__ import annotations

@@ -1,0 +1,185 @@
+"""Perf-trajectory gate: diff a run against the previous recording.
+
+The repo records one ``BENCH_<pr>.json`` per PR (``benchmarks/run.py
+--record``) — a perf trajectory, not just a snapshot.  This module turns
+that trajectory into a regression gate: the newest recording's solver
+rows are diffed against the previous one, and a drop in T_eff or a
+growth in counted halo bytes beyond tolerance fails the gate.
+
+Two tolerances, two characters of data:
+
+* ``t_eff_tol`` (default 50%) — T_eff is a wall-clock measurement and
+  noisy on shared CI machines, so only a large sustained drop trips it;
+* ``halo_tol`` (default 0%) — halo bytes are DETERMINISTICALLY counted
+  from the comm statistics (see ``CommStats``), so any growth means
+  someone added communication to a solver and must re-record.
+
+Comparisons are only meaningful between runs of the same configuration:
+when ``ndev``, quick/full mode, or the global shape differ between the
+two recordings the gate SKIPS with a clear message instead of failing
+(the CI ``bench-quick`` job runs 2 ranks against 8-rank recordings).
+
+Used three ways:
+
+* ``python -m benchmarks.compare`` — diff the two newest
+  ``BENCH_<pr>.json`` at the repo root (exit 1 on regression);
+* ``python -m benchmarks.compare A.json B.json`` — diff two explicit
+  recordings (older first);
+* ``benchmarks/run.py --check-ceilings`` — the in-process gate: the
+  just-measured results are diffed against the newest recording on disk
+  alongside the iteration ceilings of ``benchmarks/ceilings.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+T_EFF_TOL = 0.5   # relative T_eff drop tolerated (wall-clock noise)
+HALO_TOL = 0.0    # relative halo-byte growth tolerated (deterministic)
+
+
+def pr_of(path: str) -> int:
+    m = re.search(r"BENCH_(\d+)\.json$", os.path.basename(path))
+    return int(m.group(1)) if m else -1
+
+
+def recordings(root: str = ROOT) -> list[str]:
+    """All ``BENCH_<pr>.json`` recordings, oldest PR first."""
+    paths = [p for p in glob.glob(os.path.join(root, "BENCH_*.json"))
+             if pr_of(p) >= 0]
+    return sorted(paths, key=pr_of)
+
+
+def _solver_rows(payload: dict) -> dict:
+    return (payload.get("results", {}).get("solvers") or {}).get("rows", {})
+
+
+def _config(payload: dict) -> dict:
+    solvers = payload.get("results", {}).get("solvers") or {}
+    return {
+        "ndev": payload.get("ndev"),
+        "quick": payload.get("quick"),
+        "global_shape": tuple(solvers.get("global_shape") or ()),
+        "dims": tuple(solvers.get("dims") or ()),
+    }
+
+
+def compare(prev: dict, cur: dict, *, t_eff_tol: float = T_EFF_TOL,
+            halo_tol: float = HALO_TOL,
+            prev_name: str = "prev", cur_name: str = "cur"):
+    """Diff two recorded payloads -> (violations, skips, compared_rows).
+
+    ``violations``/``skips`` are human-readable strings; an incomparable
+    configuration produces one skip and zero violations.
+    """
+    pc, cc = _config(prev), _config(cur)
+    if pc != cc:
+        diffs = [f"{k}: {pc[k]!r} -> {cc[k]!r}"
+                 for k in pc if pc[k] != cc[k]]
+        return [], [f"configs differ ({'; '.join(diffs)}) — "
+                    f"not comparable, skipping trajectory gate"], 0
+    prev_rows, cur_rows = _solver_rows(prev), _solver_rows(cur)
+    violations, skips = [], []
+    compared = 0
+    for method, pr in sorted(prev_rows.items()):
+        if "iters" not in pr:
+            continue  # derived rows (comm split, overhead)
+        cr = cur_rows.get(method)
+        if cr is None or "iters" not in cr:
+            skips.append(f"{method}: in {prev_name} but not {cur_name}")
+            continue
+        compared += 1
+        pt, ct = pr.get("t_eff_gbs"), cr.get("t_eff_gbs")
+        if pt and ct and ct < pt * (1.0 - t_eff_tol):
+            violations.append(
+                f"{method}: T_eff {ct:.3f} GB/s < {(1-t_eff_tol)*100:.0f}% "
+                f"of {prev_name}'s {pt:.3f} GB/s")
+        ph, ch = pr.get("halo_bytes"), cr.get("halo_bytes")
+        if ph is not None and ch is not None and ch > ph * (1.0 + halo_tol):
+            violations.append(
+                f"{method}: halo bytes grew {ph} -> {ch} "
+                f"(+{(ch/ph-1)*100:.1f}%, tolerance {halo_tol*100:.0f}%)")
+    return violations, skips, compared
+
+
+def check(results: dict, *, ndev: int, quick: bool,
+          root: str = ROOT, exclude: str | None = None) -> list[str]:
+    """In-process gate for ``run.py --check-ceilings``: diff the
+    just-measured ``results`` against the newest recording on disk.
+
+    ``exclude`` is the path this very run just recorded to (if any) —
+    without it a ``--record BENCH_<pr>.json`` run would diff against
+    itself and trivially pass.
+
+    Returns violation strings (empty also when no recording exists or
+    the configurations are not comparable — those paths print a skip
+    note instead of failing CI).
+    """
+    recs = recordings(root)
+    if exclude is not None:
+        ex = os.path.abspath(exclude)
+        recs = [p for p in recs if os.path.abspath(p) != ex]
+    if not recs:
+        print("[compare] no BENCH_<pr>.json recordings — "
+              "trajectory gate skipped")
+        return []
+    baseline_path = recs[-1]
+    baseline = json.load(open(baseline_path))
+    current = {"ndev": ndev, "quick": quick, "results": results}
+    violations, skips, compared = compare(
+        baseline, current,
+        prev_name=os.path.basename(baseline_path), cur_name="this run")
+    for s in skips:
+        print(f"[compare] {s}")
+    if compared:
+        print(f"[compare] {compared} solver rows vs "
+              f"{os.path.basename(baseline_path)}: "
+              f"{len(violations)} regressions")
+    return violations
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="two recordings to diff, older first "
+                         "(default: the two newest BENCH_<pr>.json)")
+    ap.add_argument("--t-eff-tol", type=float, default=T_EFF_TOL,
+                    help="tolerated relative T_eff drop (default 0.5)")
+    ap.add_argument("--halo-tol", type=float, default=HALO_TOL,
+                    help="tolerated relative halo-byte growth (default 0)")
+    args = ap.parse_args(argv)
+    if args.paths:
+        if len(args.paths) != 2:
+            ap.error("pass exactly two recordings (older first)")
+        prev_path, cur_path = args.paths
+    else:
+        recs = recordings()
+        if len(recs) < 2:
+            print(f"[compare] need two recordings, found {len(recs)} — "
+                  f"nothing to diff")
+            return 0
+        prev_path, cur_path = recs[-2], recs[-1]
+    prev, cur = json.load(open(prev_path)), json.load(open(cur_path))
+    violations, skips, compared = compare(
+        prev, cur, t_eff_tol=args.t_eff_tol, halo_tol=args.halo_tol,
+        prev_name=os.path.basename(prev_path),
+        cur_name=os.path.basename(cur_path))
+    for s in skips:
+        print(f"[compare] {s}")
+    print(f"[compare] {os.path.basename(prev_path)} -> "
+          f"{os.path.basename(cur_path)}: {compared} rows compared, "
+          f"{len(violations)} regressions")
+    for v in violations:
+        print(f"  REGRESSION {v}")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

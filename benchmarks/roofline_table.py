@@ -15,12 +15,24 @@ Two row kinds:
   measured time/iteration, the paper's T_eff, and the counted per-solve
   halo bytes / all-reduces — the stencil-solver analogue of the
   roofline cells.
+
+Solver rows are VALIDATED, not just rendered: each row must carry a
+complete, finite, self-consistent measurement (iters/s_per_iter/T_eff/
+halo bytes/all-reduces, converged flag, halo_bytes == per-iter value
+summed over the counted exchanges) and its achieved T_eff must not
+exceed the machine's measured peak memory bandwidth (a quick NumPy
+triad — T_eff is a bytes/second figure, so beating STREAM means the
+measurement is broken).  Validated rows count toward ``n_ok`` so the
+recorded ``roofline`` summary in the bench aggregate reflects the
+solver table instead of reporting ``n_ok: 0`` next to ten rows.
 """
 
 import glob
 import json
+import math
 import os
 import re
+import time
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RESULTS = os.path.join(ROOT, "results", "dryrun")
@@ -82,9 +94,74 @@ def load_solver_rows():
             iters=r["iters"], s_per_iter=r["s_per_iter"],
             t_eff_gbs=r.get("t_eff_gbs"),
             halo_bytes=r.get("halo_bytes"),
+            halo_bytes_per_iter=r.get("halo_bytes_per_iter"),
+            halo_exchanges=r.get("halo_exchanges"),
             all_reduces=r.get("all_reduces"),
+            converged=r.get("converged"),
         ))
     return rows, os.path.basename(path)
+
+
+def measure_peak_gbs(nbytes: int = 1 << 26, reps: int = 3) -> float:
+    """Measured peak memory bandwidth (GB/s) via a NumPy STREAM triad.
+
+    ``a = b + s*c`` moves 3 arrays per sweep (2 reads + 1 write), the
+    same bytes-counting convention as the paper's T_eff — an achieved
+    solver T_eff above this is a broken measurement, not a fast solver.
+    """
+    import numpy as np
+
+    n = nbytes // 8
+    b = np.random.default_rng(0).random(n)
+    c = np.random.default_rng(1).random(n)
+    best = float("inf")
+    a = b + 1.5 * c  # warm up (and allocate the output once)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.add(b, 1.5 * c, out=a)
+        best = min(best, time.perf_counter() - t0)
+    return 3 * n * 8 / best / 1e9
+
+
+def validate_solver_rows(rows, peak_gbs: float | None):
+    """Split solver rows into (ok, problems) — the ``n_ok`` fix.
+
+    A row is ok when the measurement is complete, finite, internally
+    consistent, and physically plausible against the measured peak.
+    """
+    ok, problems = [], []
+    for r in rows:
+        errs = []
+        for field in ("iters", "s_per_iter", "t_eff_gbs", "halo_bytes",
+                      "all_reduces"):
+            v = r.get(field)
+            if v is None or not math.isfinite(v):
+                errs.append(f"missing/non-finite {field}")
+        if not errs:
+            if r["iters"] <= 0 or r["s_per_iter"] <= 0:
+                errs.append("non-positive iters/s_per_iter")
+            if r["t_eff_gbs"] <= 0:
+                errs.append("non-positive t_eff_gbs")
+            if r.get("converged") is False:
+                errs.append("did not converge")
+            per = r.get("halo_bytes_per_iter")
+            nex = r.get("halo_exchanges")
+            if per and nex:
+                # counted total must cover the per-iter bytes over the
+                # iteration count (setup exchanges only add on top)
+                if r["halo_bytes"] < per * r["iters"] or nex < r["iters"]:
+                    errs.append("halo_bytes inconsistent with per-iter "
+                                "bytes x iters")
+            if peak_gbs and r["t_eff_gbs"] > 1.1 * peak_gbs:
+                errs.append(f"T_eff {r['t_eff_gbs']:.2f} GB/s exceeds "
+                            f"measured peak {peak_gbs:.2f} GB/s")
+        r["achieved_frac"] = (r["t_eff_gbs"] / peak_gbs
+                              if peak_gbs and not errs else None)
+        if errs:
+            problems.append(f"{r['method']}: " + "; ".join(errs))
+        else:
+            ok.append(r)
+    return ok, problems
 
 
 def fraction(r):
@@ -120,20 +197,23 @@ def render(rows):
     return "\n".join(lines)
 
 
-def render_solver(rows):
+def render_solver(rows, peak_gbs=None):
+    peak = "" if not peak_gbs else f" (measured peak {peak_gbs:.1f} GB/s)"
     lines = [
         "| method | global shape | mesh | iters | ms/iter | T_eff GB/s | "
-        "halo MB/solve | all-reduces/solve |",
-        "|---|---|---|---|---|---|---|---|",
+        f"achieved/peak{peak} | halo MB/solve | all-reduces/solve |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
         t_eff = "—" if r["t_eff_gbs"] is None else f"{r['t_eff_gbs']:.3f}"
+        frac = r.get("achieved_frac")
+        frac = "—" if frac is None else f"{frac:.4f}"
         halo = "—" if r["halo_bytes"] is None \
             else f"{r['halo_bytes'] / 2**20:.2f}"
         ar = "—" if r["all_reduces"] is None else str(r["all_reduces"])
         lines.append(
             f"| {r['method']} | {r['shape']} | {r['mesh']} | {r['iters']} | "
-            f"{r['s_per_iter']*1e3:.2f} | {t_eff} | {halo} | {ar} |"
+            f"{r['s_per_iter']*1e3:.2f} | {t_eff} | {frac} | {halo} | {ar} |"
         )
     return "\n".join(lines)
 
@@ -146,6 +226,8 @@ def run(quick=True):
               "--all; no BENCH_<pr>.json either — run "
               "python -m benchmarks.run --record)")
         return {}
+    peak_gbs = measure_peak_gbs() if solver_rows else None
+    solver_ok, solver_problems = validate_solver_rows(solver_rows, peak_gbs)
     sections = ["# Roofline table (from the multi-pod dry-run)"]
     if rows:
         sections.append(render(rows))
@@ -153,14 +235,18 @@ def run(quick=True):
         sections.append("(no dry-run results recorded)")
     if solver_rows:
         sections.append(f"## Solver rows (from {bench_name})\n\n"
-                        + render_solver(solver_rows))
+                        + render_solver(solver_rows, peak_gbs))
+        if solver_problems:
+            sections.append("### Validation problems\n\n"
+                            + "\n".join(f"- {p}" for p in solver_problems))
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         f.write("\n\n".join(sections) + "\n")
     ok = [r for r in rows if r["status"] == "ok"]
     skipped = [r for r in rows if r["status"] == "skipped"]
     print(f"== roofline table: {len(ok)} compiled cells, {len(skipped)} "
-          f"skipped, {len(solver_rows)} solver rows -> {OUT} ==")
+          f"skipped, {len(solver_ok)}/{len(solver_rows)} solver rows "
+          f"validated -> {OUT} ==")
     by_dom = {}
     for r in ok:
         by_dom.setdefault(r["roofline"]["dominant"], []).append(r)
@@ -173,9 +259,14 @@ def run(quick=True):
             print(f"   {r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
                   f"{fraction(r):.3f}")
     if solver_rows:
-        print(render_solver(solver_rows))
-    return {"n_ok": len(ok), "n_skipped": len(skipped),
-            "n_solver_rows": len(solver_rows)}
+        print(render_solver(solver_rows, peak_gbs))
+        for p in solver_problems:
+            print(f"  PROBLEM {p}")
+    return {"n_ok": len(ok) + len(solver_ok), "n_skipped": len(skipped),
+            "n_solver_rows": len(solver_rows),
+            "n_solver_ok": len(solver_ok),
+            "solver_problems": solver_problems,
+            "peak_gbs": peak_gbs}
 
 
 if __name__ == "__main__":

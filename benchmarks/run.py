@@ -33,8 +33,11 @@ larger measurement sizes.  Telemetry modes:
   smaller global problem with iteration counts at or below the 8-rank
   reference);
 * ``--check-ceilings`` — fail (exit 1) if any recorded solver iteration
-  count exceeds the ceilings of ``benchmarks/ceilings.py`` (the CI
-  ``bench-quick`` regression gate).
+  count exceeds the ceilings of ``benchmarks/ceilings.py``, or if the
+  measured T_eff / counted halo bytes regress beyond tolerance against
+  the newest ``BENCH_<pr>.json`` recording (``benchmarks/compare.py``;
+  skipped with a message when the configurations are not comparable) —
+  the CI ``bench-quick`` regression gate.
 """
 
 import argparse
@@ -120,6 +123,7 @@ def main() -> None:
 
     if args.check_ceilings:
         from benchmarks.ceilings import check
+        from benchmarks.compare import check as check_trajectory
         violations = check(results)
         if violations:
             print("[bench] ITERATION CEILING VIOLATIONS:")
@@ -128,6 +132,15 @@ def main() -> None:
             failures.append(("ceilings", f"{len(violations)} violations"))
         else:
             print("[bench] all recorded iteration counts within ceilings")
+        regressions = check_trajectory(results, ndev=args.ndev, quick=quick,
+                                       exclude=args.record)
+        if regressions:
+            print("[bench] PERF-TRAJECTORY REGRESSIONS:")
+            for v in regressions:
+                print(f"  {v}")
+            failures.append(("trajectory", f"{len(regressions)} regressions"))
+        else:
+            print("[bench] perf trajectory ok vs previous recording")
 
     print(f"\n== benchmarks done in {time.time()-t0:.0f}s; "
           f"{len(failures)} failures ==")

@@ -105,25 +105,28 @@ rows["comm_compute_split"] = dict(
 # telemetry overhead on the instrumented quick mgcg solve: everything is
 # warm (compiled executable + cached comm re-trace), so the remaining
 # cost is the session bookkeeping — the acceptance bar is < 2%.
-def median_solve(n=5, instrumented=False):
-    ts = []
-    for _ in range(n):
-        if instrumented:
-            with tele.session():
-                t0 = time.perf_counter()
-                app.solve("mgcg", tol={tol})
-                ts.append(time.perf_counter() - t0)
-        else:
+# Plain/instrumented solves are INTERLEAVED so slow machine drift over
+# the run (CPU contention, thermal throttling) cancels instead of
+# biasing whichever block was measured last.
+def one_solve(instrumented):
+    if instrumented:
+        with tele.session():
             t0 = time.perf_counter()
             app.solve("mgcg", tol={tol})
-            ts.append(time.perf_counter() - t0)
-    return sorted(ts)[len(ts) // 2]
+            return time.perf_counter() - t0
+    t0 = time.perf_counter()
+    app.solve("mgcg", tol={tol})
+    return time.perf_counter() - t0
 
 app.solve("mgcg", tol={tol})                      # ensure warm
 with tele.session():
     app.solve("mgcg", tol={tol})                  # ensure comm cached
-t_off = median_solve(instrumented=False)
-t_on = median_solve(instrumented=True)
+offs, ons = [], []
+for _ in range(5):
+    offs.append(one_solve(False))
+    ons.append(one_solve(True))
+t_off = sorted(offs)[len(offs) // 2]
+t_on = sorted(ons)[len(ons) // 2]
 rows["telemetry_overhead"] = dict(
     plain_s=t_off, instrumented_s=t_on,
     overhead_fraction=(t_on - t_off) / t_off,

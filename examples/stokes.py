@@ -14,7 +14,13 @@ Run on 8 fake CPU devices:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/stokes.py
+
+``--heartbeat K`` streams a rank-0 health heartbeat every K solver
+iterations; ``--flight-record DIR`` arms the per-rank flight recorder
+(post-mortem via ``python -m repro.telemetry.diag DIR``).
 """
+
+import argparse
 
 import jax
 
@@ -26,9 +32,20 @@ from repro import fields                        # noqa: E402
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--heartbeat", type=int, default=0, metavar="K",
+                    help="rank-0 solver heartbeat event every K iterations "
+                         "(installs the solve-health watchdogs)")
+    ap.add_argument("--flight-record", metavar="DIR", default=None,
+                    help="per-rank flight recorder dumping to DIR on "
+                         "failure (diagnose with python -m "
+                         "repro.telemetry.diag DIR)")
+    args = ap.parse_args()
+
     # Local block 10^3 (incl. halo) per device; the implicit global grid
     # is assembled from the device count (e.g. 8 devices -> 2x2x2 blocks).
-    app = Stokes3D(nx=10, ny=10, nz=10, eta_amp=0.5)
+    app = Stokes3D(nx=10, ny=10, nz=10, eta_amp=0.5,
+                   heartbeat=args.heartbeat, flight_dir=args.flight_record)
     print(f"global grid {app.grid.global_shape}, "
           f"{app.grid.dims} device blocks")
 

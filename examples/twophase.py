@@ -34,6 +34,13 @@ def main():
     ap.add_argument("--periodic", action="store_true",
                     help="periodic x/y dims (works with every method: the "
                          "implicit pressure operator stays nonsingular)")
+    ap.add_argument("--heartbeat", type=int, default=0, metavar="K",
+                    help="rank-0 solver heartbeat event every K iterations "
+                         "(installs the solve-health watchdogs)")
+    ap.add_argument("--flight-record", metavar="DIR", default=None,
+                    help="per-rank flight recorder dumping to DIR on "
+                         "failure (diagnose with python -m "
+                         "repro.telemetry.diag DIR)")
     args = ap.parse_args()
 
     import jax
@@ -43,15 +50,16 @@ def main():
 
     print(f"devices: {jax.device_count()}")
     per = (True, True, False) if args.periodic else (False, False, False)
+    obs = dict(heartbeat=args.heartbeat, flight_dir=args.flight_record)
     if args.method == "explicit":
         app = TwoPhase3D(nx=args.nx, ny=args.nx, nz=args.nx, hide=(8, 2, 2),
-                         periodic=per)
+                         periodic=per, **obs)
     else:
         # dt defaults to 10x the explicit stability limit — the point of
         # the implicit pressure projection
         app = TwoPhase3D(nx=args.nx, ny=args.nx, nz=args.nx,
                          method=args.method, overlap=args.overlap, tol=1e-6,
-                         periodic=per)
+                         periodic=per, **obs)
     nt = args.nt if args.nt is not None else \
         (150 if args.method == "explicit" else 15)
     g = app.grid

@@ -34,6 +34,8 @@ class Heat3D:
     use_kernel: str = "ref"           # ref | interpret | pallas
     dims: tuple | None = None
     dtype: object = jnp.float32
+    heartbeat: int = 0      # rank-0 heartbeat event every k solver iterations
+    flight_dir: str | None = None  # per-rank flight-record dump directory
 
     def __post_init__(self):
         self.grid = init_global_grid(self.nx, self.ny, self.nz,
@@ -80,11 +82,19 @@ class Heat3D:
     def run(self, nt: int, T=None, Ci=None):
         if T is None:
             T, Ci = self.init_fields()
-        with tele.region("heat3d.run", nt=nt, sync=lambda: T):
+        with self._observe(), \
+                tele.region("heat3d.run", nt=nt, sync=lambda: T):
             for _ in range(nt):
                 T = self._step(T, Ci)
             T.block_until_ready()
         return T, Ci
+
+    def _observe(self):
+        """Runtime observability per the app's ``heartbeat``/``flight_dir``
+        fields (reentrant no-op when both are off/outer-installed)."""
+        return tele.observe(heartbeat=self.heartbeat,
+                            flight_dir=self.flight_dir,
+                            meta={"app": "heat3d", "dims": self.grid.dims})
 
     def oracle(self, nt: int) -> np.ndarray:
         """Single-array NumPy reference on the deduplicated global grid."""

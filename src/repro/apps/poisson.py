@@ -45,6 +45,8 @@ class Poisson3D:
     dims: tuple | None = None
     mesh: object = None     # optional explicit device mesh (subset runs)
     dtype: object = jnp.float64
+    heartbeat: int = 0      # rank-0 heartbeat event every k solver iterations
+    flight_dir: str | None = None  # per-rank flight-record dump directory
 
     def __post_init__(self):
         if self.dtype == jnp.float64 and not jax.config.jax_enable_x64:
@@ -162,9 +164,17 @@ class Poisson3D:
         ``overlap=True`` (cg/mgcg) switches the operator to the
         communication-hiding application.  Returns ``(u, info)``.
         """
-        with tele.region(f"poisson.solve.{method}",
-                         singular=self.singular, overlap=overlap):
+        with self._observe(), \
+                tele.region(f"poisson.solve.{method}",
+                            singular=self.singular, overlap=overlap):
             return self._solve(method, tol, maxiter, overlap, **kw)
+
+    def _observe(self):
+        """Runtime observability per the app's ``heartbeat``/``flight_dir``
+        fields (reentrant no-op when both are off/outer-installed)."""
+        return tele.observe(heartbeat=self.heartbeat,
+                            flight_dir=self.flight_dir,
+                            meta={"app": "poisson", "dims": self.grid.dims})
 
     def _solve(self, method, tol, maxiter, overlap, **kw):
         apply_A = self.apply_A_overlap if overlap else self.apply_A

@@ -156,6 +156,8 @@ class Stokes3D:
     dims: tuple | None = None
     mesh: object = None     # optional explicit device mesh (subset runs)
     dtype: object = jnp.float64
+    heartbeat: int = 0      # rank-0 heartbeat event every k solver iterations
+    flight_dir: str | None = None  # per-rank flight-record dump directory
 
     def __post_init__(self):
         if self.dtype == jnp.float64 and not jax.config.jax_enable_x64:
@@ -318,11 +320,20 @@ class Stokes3D:
         :meth:`_precond`).
         """
         b = self._rhs(P) if P is not None else self.F
-        with tele.region("stokes.velocity_solve", precond=str(precond)):
+        with self._observe(), \
+                tele.region("stokes.velocity_solve", precond=str(precond)):
             return solvers.cg(
                 self.grid, self.apply_A, b, x0=x0, tol=tol, maxiter=maxiter,
                 apply_M=self._precond(precond),
                 args=(self.eta,))
+
+    def _observe(self):
+        """Runtime observability per the app's ``heartbeat``/``flight_dir``
+        fields (reentrant no-op when both are off/outer-installed)."""
+        return tele.observe(heartbeat=self.heartbeat,
+                            flight_dir=self.flight_dir,
+                            meta={"app": "stokes", "stress": self.stress,
+                                  "dims": self.grid.dims})
 
     # ------------------------------------------------------------------
     # pressure-space helpers (host level, jitted shard_maps)
@@ -483,7 +494,8 @@ class Stokes3D:
         if method not in ("schur", "uzawa"):
             raise ValueError(f"unknown method {method!r}")
         inner_tol = max(tol * 1e-2, 1e-12) if inner_tol is None else inner_tol
-        with tele.region(f"stokes.solve.{method}", precond=str(precond)):
+        with self._observe(), \
+                tele.region(f"stokes.solve.{method}", precond=str(precond)):
             if method == "uzawa":
                 return self._solve_uzawa(tol, outer_maxiter, inner_tol,
                                          precond)

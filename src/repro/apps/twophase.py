@@ -82,6 +82,8 @@ class TwoPhase3D:
     dims: tuple | None = None
     mesh: object = None      # optional explicit device mesh (subset runs)
     dtype: object = jnp.float64
+    heartbeat: int = 0       # rank-0 heartbeat event every k solver iterations
+    flight_dir: str | None = None  # per-rank flight-record dump directory
 
     def __post_init__(self):
         if self.method not in METHODS:
@@ -231,12 +233,13 @@ class TwoPhase3D:
         """
         k, diag, rhs = self._assemble(S.Pe, S.phi)
         apply_A = self.apply_A_overlap if self.overlap else self.apply_A
-        return solvers.cg(
-            self.grid, apply_A, rhs, x0=S.Pe,
-            tol=self.tol if tol is None else tol,
-            maxiter=self.maxiter if maxiter is None else maxiter,
-            apply_M=self._precond() if self.method == "mgcg" else None,
-            args=(k, diag))
+        with self._observe():
+            return solvers.cg(
+                self.grid, apply_A, rhs, x0=S.Pe,
+                tol=self.tol if tol is None else tol,
+                maxiter=self.maxiter if maxiter is None else maxiter,
+                apply_M=self._precond() if self.method == "mgcg" else None,
+                args=(k, diag))
 
     # ------------------------------------------------------------------
     # time stepping
@@ -269,13 +272,22 @@ class TwoPhase3D:
         if S is None:
             S = self.init_fields()
         infos = []
-        with tele.region("twophase.run", nt=nt, method=self.method):
+        with self._observe(), \
+                tele.region("twophase.run", nt=nt, method=self.method):
             for _ in range(nt):
                 S, info = self.step(S)
                 if info is not None:
                     infos.append(info)
             S.Pe.data.block_until_ready()
         return S, infos
+
+    def _observe(self):
+        """Runtime observability per the app's ``heartbeat``/``flight_dir``
+        fields (reentrant no-op when both are off/outer-installed)."""
+        return tele.observe(heartbeat=self.heartbeat,
+                            flight_dir=self.flight_dir,
+                            meta={"app": "twophase", "method": self.method,
+                                  "dims": self.grid.dims})
 
     def fluxes(self, S: FieldSet) -> FieldSet:
         """Staggered Darcy fluxes of ``S`` as a halo-updated face FieldSet."""

@@ -7,19 +7,23 @@ whole decode step jits to one executable; the engine just drives it.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry as tele
 from repro.models import transformer as tf
 
 
 class Engine:
-    def __init__(self, cfg, params, *, cache_len: int | None = None):
+    def __init__(self, cfg, params, *, cache_len: int | None = None,
+                 flight_dir: str | None = None):
         self.cfg = cfg
         self.params = params
         self.cache_len = cache_len or cfg.max_seq
+        self.flight_dir = flight_dir
         self._decode = jax.jit(
             lambda params, token, pos, caches, cross: tf.decode_step(
                 params, cfg, token, pos, caches, cross_states=cross
@@ -31,25 +35,41 @@ class Engine:
             )
         )
 
+    def _observe(self):
+        """Flight recorder for the duration of a generate() call (no-op
+        reentrant when ``flight_dir`` is unset or a recorder is live)."""
+        if self.flight_dir is None:
+            return contextlib.nullcontext()
+        return tele.flight(self.flight_dir,
+                           meta={"app": "serve", "cache_len": self.cache_len})
+
     def generate(self, tokens, n_new: int, *, cross_inputs=None,
                  temperature: float = 0.0, key=None):
         """tokens: (B, T) prompt. Returns (B, n_new) generated ids."""
         cfg = self.cfg
-        cross = None
-        if cfg.encoder is not None or cfg.cross_source == "image":
-            batch = dict(cross_inputs or {})
-            cross = tf.encode_cross_states(self.params, cfg, batch)
-        logits, caches = self._prefill(self.params, tokens, cross)
         B, T = tokens.shape
-        out = []
-        cur = None
-        for i in range(n_new):
-            if temperature > 0.0:
-                key, k = jax.random.split(key)
-                cur = jax.random.categorical(k, logits / temperature)[:, None]
-            else:
-                cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            out.append(cur)
-            pos = jnp.asarray(T + i, jnp.int32)
-            logits, caches = self._decode(self.params, cur, pos, caches, cross)
+        with self._observe():
+            cross = None
+            if cfg.encoder is not None or cfg.cross_source == "image":
+                batch = dict(cross_inputs or {})
+                cross = tf.encode_cross_states(self.params, cfg, batch)
+            with tele.region("serve.prefill", batch=B, prompt_len=T):
+                logits, caches = self._prefill(self.params, tokens, cross)
+                jax.block_until_ready(logits)
+            out = []
+            cur = None
+            with tele.region("serve.decode", batch=B, n_new=n_new,
+                             sync=lambda: logits):
+                for i in range(n_new):
+                    if temperature > 0.0:
+                        key, k = jax.random.split(key)
+                        cur = jax.random.categorical(
+                            k, logits / temperature)[:, None]
+                    else:
+                        cur = jnp.argmax(
+                            logits, axis=-1)[:, None].astype(jnp.int32)
+                    out.append(cur)
+                    pos = jnp.asarray(T + i, jnp.int32)
+                    logits, caches = self._decode(self.params, cur, pos,
+                                                  caches, cross)
         return jnp.concatenate(out, axis=1)

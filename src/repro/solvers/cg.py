@@ -37,6 +37,8 @@ from jax.sharding import PartitionSpec as P
 from repro import telemetry as tele
 from repro.core.grid import ImplicitGlobalGrid
 from repro.core.locations import is_field_node as _is_field_node
+from repro.telemetry.flight import note_solve as _note_solve
+from repro.telemetry import health as _health
 from . import reductions as red
 
 
@@ -51,7 +53,11 @@ class SolveInfo:
     shape/operator includes compile time — benchmarks warm up first).
     ``comm`` (populated when a :mod:`repro.telemetry` session is active)
     is the exact per-solve communication split: halo exchanges/bytes per
-    dim and all-reduce counts, setup vs per-iteration.
+    dim and all-reduce counts, setup vs per-iteration.  ``status`` is the
+    typed :class:`repro.telemetry.SolveStatus` outcome — always
+    classified from the host scalars; under an active
+    :func:`repro.telemetry.watch` the device-side probes refine it with
+    stagnation/divergence detection and sticky early exit.
     """
 
     iterations: int
@@ -61,6 +67,7 @@ class SolveInfo:
         default_factory=lambda: np.zeros(0))
     wall_s: float | None = None
     comm: "tele.CommStats | None" = None
+    status: "tele.SolveStatus | None" = None
 
     def s_per_iter(self) -> float:
         """Wall seconds per iteration (NaN before timing is recorded)."""
@@ -169,6 +176,11 @@ def cg(
             x0 = cast(x0)
     if x0 is None:
         x0 = _tmap(jnp.zeros_like, b)
+    # Health watchdogs are trace-time opt-in: with no watch installed the
+    # probes below are compiled out entirely and the traced program is the
+    # exact pre-watchdog one (byte-identical lowered HLO, pinned by
+    # tests/test_telemetry.py).  The config joins the jit-cache key.
+    cfg = _health.current()
 
     def _local(b, x, *ops):
         red_masks, unk_masks = _mask_trees(grid, b)
@@ -210,13 +222,17 @@ def cg(
         # while_loop carry (device-side buffer; ONE transfer at the end,
         # no per-iteration host syncs).
         hist0 = jnp.zeros((maxiter,), res.dtype)
+        res0 = res
 
         def cond(carry):
-            _, _, _, _, res, k, _ = carry
-            return (res > tol * bnorm) & (k < maxiter)
+            res, k = carry[4], carry[5]
+            go = (res > tol * bnorm) & (k < maxiter)
+            if cfg is not None:
+                go = go & _health.carry_ok(carry[7])
+            return go
 
         def body(carry):
-            x, r, p, rz, _, k, hist = carry
+            x, r, p, rz, _, k, hist = carry[:7]
             # tele.tag is a trace-time bucket marker for the comm
             # counters (see repro.telemetry.counters) — pure Python, no
             # effect on the lowered program.
@@ -234,23 +250,39 @@ def cg(
                     else jnp.sqrt(rz_new)
                 hist = jax.lax.dynamic_update_index_in_dim(
                     hist, (res / bnorm).astype(hist.dtype), k, 0)
-            return x, r, p, rz_new, res, k + 1, hist
+            out = (x, r, p, rz_new, res, k + 1, hist)
+            if cfg is not None:
+                # the residual is already globally reduced and replicated,
+                # so the probe classifies with zero extra collectives
+                hc = _health.probe(cfg, carry[7], res, res0)
+                _health.maybe_heartbeat(cfg, "cg", grid.topo, k + 1,
+                                        res / bnorm)
+                out = out + (hc,)
+            return out
 
-        x, _, _, _, res, k, hist = jax.lax.while_loop(
-            cond, body, (x, r, p, rz, res, jnp.zeros((), jnp.int32), hist0)
-        )
+        carry0 = (x, r, p, rz, res, jnp.zeros((), jnp.int32), hist0)
+        if cfg is not None:
+            carry0 = carry0 + (_health.carry_init(res),)
+        final = jax.lax.while_loop(cond, body, carry0)
+        x, res, k, hist = final[0], final[4], final[5], final[6]
         # Return the mean-zero representative of a singular solve, and
         # refresh the seam halo cells of x (never written by the masked
         # updates) so gather() sees the solution everywhere.
         x = project(x)
         x = _tmap(lambda a: grid.update_halo(a), x)
-        return x, k, res / bnorm, hist
+        if cfg is None:
+            return x, k, res / bnorm, hist
+        status = _health.finalize(final[7], res, bnorm, tol)
+        _health.emit_final("cg", grid.topo, k, res / bnorm, status, hist,
+                           maxiter)
+        return x, k, res / bnorm, hist, status
 
     def _build():
+        n_out = 4 if cfg is None else 5
         return jax.shard_map(
             _local, mesh=grid.mesh,
             in_specs=(grid.spec, grid.spec) + tuple(grid.spec for _ in args),
-            out_specs=(grid.spec, P(), P(), P()),
+            out_specs=(grid.spec,) + tuple(P() for _ in range(n_out - 1)),
             check_vma=False,
         )
 
@@ -258,7 +290,7 @@ def cg(
     # reuse the grid's executable cache so repeat solves skip retracing
     # (and finalize() releases them).
     key = ("solvers.cg", apply_A, apply_M, tol, maxiter, project_nullspace,
-           _sig(b), tuple(_sig(a) for a in args))
+           _sig(b), tuple(_sig(a) for a in args), cfg)
     if key not in grid._jit_cache:
         grid._jit_cache[key] = jax.jit(_build())
 
@@ -273,9 +305,17 @@ def cg(
         comm = grid._jit_cache[ckey]
 
     t0 = time.perf_counter()
-    x, k, relres, hist = grid._jit_cache[key](b, x0, *args)
+    outs = grid._jit_cache[key](b, x0, *args)
+    x, k, relres, hist = outs[:4]
     k, relres = int(k), float(relres)   # blocks until the solve is done
     wall = time.perf_counter() - t0
-    return x, SolveInfo(iterations=k, relres=relres, converged=relres <= tol,
-                        residuals=np.asarray(hist)[:k], wall_s=wall,
-                        comm=comm)
+    dstatus = None
+    if cfg is not None:
+        dstatus = int(outs[4])
+        jax.effects_barrier()  # flush heartbeat/final-health callbacks
+    status = _health.classify(dstatus, relres, tol, k, maxiter)
+    info = SolveInfo(iterations=k, relres=relres, converged=relres <= tol,
+                     residuals=np.asarray(hist)[:k], wall_s=wall,
+                     comm=comm, status=status)
+    _note_solve("cg", info)
+    return x, info

@@ -64,6 +64,8 @@ from repro.core import hide as _hide
 from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
 from repro.stencil import mac as _mac
+from repro.telemetry.flight import note_solve as _note_solve
+from repro.telemetry import health as _health
 from . import reductions as red
 from . import transfers
 from .cg import SolveInfo
@@ -619,6 +621,7 @@ def multigrid_solve(
     hs = level_spacings(grid, grids, spacing)
 
     singular = all(grid.topo.periodic)
+    cfg = _health.current()  # trace-time opt-in, joins the jit-cache key
 
     def _local(b, c, x):
         cs = build_coefficients(grid, grids, c)
@@ -643,36 +646,54 @@ def multigrid_solve(
         hist0 = jnp.zeros((maxiter,), res0.dtype)
 
         def cond(carry):
-            _, res, k, _ = carry
-            return (res > tol * bnorm) & (k < maxiter)
+            res, k = carry[1], carry[2]
+            go = (res > tol * bnorm) & (k < maxiter)
+            if cfg is not None:
+                go = go & _health.carry_ok(carry[4])
+            return go
 
         def body(carry):
-            x, _, k, hist = carry
+            x, _, k, hist = carry[:4]
             with tele.tag("iteration"):
                 x = v_cycle(0, x, b)
                 r = residual(0, x, b)
                 res = jnp.sqrt(red.dot(grid, r, r, mask))
                 hist = jax.lax.dynamic_update_index_in_dim(
                     hist, (res / bnorm).astype(hist.dtype), k, 0)
-            return x, res, k + 1, hist
+            out = (x, res, k + 1, hist)
+            if cfg is not None:
+                hc = _health.probe(cfg, carry[4], res, res0)
+                _health.maybe_heartbeat(cfg, "mg", grid.topo, k + 1,
+                                        res / bnorm)
+                out = out + (hc,)
+            return out
 
-        x, res, k, hist = jax.lax.while_loop(
-            cond, body, (x, res0, jnp.zeros((), jnp.int32), hist0)
-        )
+        carry0 = (x, res0, jnp.zeros((), jnp.int32), hist0)
+        if cfg is not None:
+            carry0 = carry0 + (_health.carry_init(res0),)
+        final = jax.lax.while_loop(cond, body, carry0)
+        x, res, k, hist = final[0], final[1], final[2], final[3]
         if singular:
             x = grid.update_halo(demean(x))
-        return x, k, res / bnorm, hist
+        if cfg is None:
+            return x, k, res / bnorm, hist
+        status = _health.finalize(final[4], res, bnorm, tol)
+        _health.emit_final("mg", grid.topo, k, res / bnorm, status, hist,
+                           maxiter)
+        return x, k, res / bnorm, hist, status
 
     def _build():
+        n_out = 4 if cfg is None else 5
         return jax.shard_map(
             _local, mesh=grid.mesh,
             in_specs=(grid.spec, grid.spec, grid.spec),
-            out_specs=(grid.spec, P(), P(), P()),
+            out_specs=(grid.spec,) + tuple(P() for _ in range(n_out - 1)),
             check_vma=False,
         )
 
     key = ("solvers.mg", loc, tol, maxiter, nu_pre, nu_post, omega,
-           coarse_sweeps, max_levels, smoother, spacing, b.shape, b.dtype)
+           coarse_sweeps, max_levels, smoother, spacing, b.shape, b.dtype,
+           cfg)
     if key not in grid._jit_cache:
         grid._jit_cache[key] = jax.jit(_build())
 
@@ -684,11 +705,19 @@ def multigrid_solve(
         comm = grid._jit_cache[ckey]
 
     t0 = time.perf_counter()
-    x, k, relres, hist = grid._jit_cache[key](b, c, x0)
+    outs = grid._jit_cache[key](b, c, x0)
+    x, k, relres, hist = outs[:4]
     k, relres = int(k), float(relres)
     wall = time.perf_counter() - t0
     if wrap is not None:
         x = wrap(x)
-    return x, SolveInfo(iterations=k, relres=relres, converged=relres <= tol,
-                        residuals=np.asarray(hist)[:k], wall_s=wall,
-                        comm=comm)
+    dstatus = None
+    if cfg is not None:
+        dstatus = int(outs[4])
+        jax.effects_barrier()  # flush heartbeat/final-health callbacks
+    status = _health.classify(dstatus, relres, tol, k, maxiter)
+    info = SolveInfo(iterations=k, relres=relres, converged=relres <= tol,
+                     residuals=np.asarray(hist)[:k], wall_s=wall,
+                     comm=comm, status=status)
+    _note_solve("mg", info)
+    return x, info

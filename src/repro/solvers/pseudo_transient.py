@@ -36,6 +36,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import telemetry as tele
 from repro.core.grid import ImplicitGlobalGrid
+from repro.telemetry.flight import note_solve as _note_solve
+from repro.telemetry import health as _health
 from . import reductions as red
 from .cg import SolveInfo
 
@@ -85,6 +87,7 @@ def pseudo_transient(
     if x0 is None:
         x0 = jnp.zeros_like(b)
     alpha, beta = optimal_parameters(lam_min, lam_max)
+    cfg = _health.current()  # trace-time opt-in, joins the jit-cache key
 
     def _local(b, x, *ops):
         mask = red.solve_mask(grid, b.dtype)
@@ -97,13 +100,16 @@ def pseudo_transient(
         hist0 = jnp.zeros((maxiter,), b.dtype)
 
         def cond(carry):
-            _, _, _, res, k, _ = carry
-            return (res > tol * bnorm) & (k < maxiter)
+            res, k = carry[3], carry[4]
+            go = (res > tol * bnorm) & (k < maxiter)
+            if cfg is not None:
+                go = go & _health.carry_ok(carry[6])
+            return go
 
         def body(carry):
             # r (the residual at x) is carried, so the operator — a full
             # halo exchange + stencil — runs exactly once per iteration.
-            x, v, r, _, k, hist = carry
+            x, v, r, _, k, hist = carry[:6]
             with tele.tag("iteration"):
                 v = beta * v + alpha * r
                 x = x + v
@@ -111,24 +117,38 @@ def pseudo_transient(
                 res = jnp.sqrt(red.dot(grid, r, r, mask))
                 hist = jax.lax.dynamic_update_index_in_dim(
                     hist, res.astype(hist.dtype), k, 0)
-            return x, v, r, res, k + 1, hist
+            out = (x, v, r, res, k + 1, hist)
+            if cfg is not None:
+                hc = _health.probe(cfg, carry[6], res, res0)
+                _health.maybe_heartbeat(cfg, "pt", grid.topo, k + 1,
+                                        res / bnorm)
+                out = out + (hc,)
+            return out
 
-        x, _, _, res, k, hist = jax.lax.while_loop(
-            cond, body,
-            (x, jnp.zeros_like(x), r0, res0, jnp.zeros((), jnp.int32), hist0),
-        )
-        return grid.update_halo(x), k, res / bnorm, hist
+        carry0 = (x, jnp.zeros_like(x), r0, res0,
+                  jnp.zeros((), jnp.int32), hist0)
+        if cfg is not None:
+            carry0 = carry0 + (_health.carry_init(res0),)
+        final = jax.lax.while_loop(cond, body, carry0)
+        x, res, k, hist = final[0], final[3], final[4], final[5]
+        if cfg is None:
+            return grid.update_halo(x), k, res / bnorm, hist
+        status = _health.finalize(final[6], res, bnorm, tol)
+        _health.emit_final("pt", grid.topo, k, res / bnorm, status, hist,
+                           maxiter)
+        return grid.update_halo(x), k, res / bnorm, hist, status
 
     def _build():
+        n_out = 4 if cfg is None else 5
         return jax.shard_map(
             _local, mesh=grid.mesh,
             in_specs=(grid.spec, grid.spec) + tuple(grid.spec for _ in args),
-            out_specs=(grid.spec, P(), P(), P()),
+            out_specs=(grid.spec,) + tuple(P() for _ in range(n_out - 1)),
             check_vma=False,
         )
 
     key = ("solvers.pt", apply_A, alpha, beta, tol, maxiter,
-           b.shape, b.dtype, tuple((a.shape, a.dtype) for a in args))
+           b.shape, b.dtype, tuple((a.shape, a.dtype) for a in args), cfg)
     if key not in grid._jit_cache:
         grid._jit_cache[key] = jax.jit(_build())
 
@@ -140,10 +160,19 @@ def pseudo_transient(
         comm = grid._jit_cache[ckey]
 
     t0 = time.perf_counter()
-    x, k, relres, hist = grid._jit_cache[key](b, x0, *args)
+    outs = grid._jit_cache[key](b, x0, *args)
+    x, k, relres, hist = outs[:4]
     k, relres = int(k), float(relres)
     wall = time.perf_counter() - t0
-    return x, PTInfo(
+    dstatus = None
+    if cfg is not None:
+        dstatus = int(outs[4])
+        jax.effects_barrier()  # flush heartbeat/final-health callbacks
+    status = _health.classify(dstatus, relres, tol, k, maxiter)
+    info = PTInfo(
         iterations=k, relres=relres, converged=relres <= tol,
         residuals=np.asarray(hist)[:k], wall_s=wall, comm=comm,
+        status=status,
     )
+    _note_solve("pt", info)
+    return x, info

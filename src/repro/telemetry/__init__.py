@@ -39,21 +39,49 @@ against the analytic halo-volume formula ``2 * halo * prod(face) *
 itemsize`` per dim).
 """
 
+import contextlib as _contextlib
+
 from .counters import (
     CommStats, CounterSnapshot, counting, counting_enabled, count_comm,
     halo_slab_bytes, record_all_reduce, record_halo, tag,
 )
+from .flight import FlightRecorder, flight
+from .health import HealthConfig, SolveStatus, watch, watching
 from .metrics import a_eff, t_eff
 from .sink import ChromeTraceSink, JsonlSink, MemorySink, NullSink
 from .timers import (
     Session, current_session, enabled, metric, region, session,
 )
 
+
+@_contextlib.contextmanager
+def observe(*, heartbeat: int = 0, flight_dir: str | None = None,
+            flight_capacity: int = 256, meta: dict | None = None, **watch_kw):
+    """One-stop runtime observability: flight recorder + health watch.
+
+    ``heartbeat > 0`` installs solve-health watchdogs (:func:`watch`)
+    with a rank-0 heartbeat every that many iterations; ``flight_dir``
+    installs a per-rank flight recorder dumping there.  Both are
+    reentrant, so app-level observe blocks compose under an outer
+    session/watch.  With neither requested this is a no-op block.
+    """
+    with _contextlib.ExitStack() as stack:
+        if flight_dir:
+            stack.enter_context(flight(flight_dir, capacity=flight_capacity,
+                                       meta=meta))
+        if heartbeat or watch_kw:
+            stack.enter_context(watch(heartbeat_every=heartbeat, **watch_kw))
+        yield
+
+
 __all__ = [
     "CommStats", "CounterSnapshot", "counting", "counting_enabled",
     "count_comm", "halo_slab_bytes", "record_all_reduce", "record_halo",
     "tag",
+    "FlightRecorder", "flight",
+    "HealthConfig", "SolveStatus", "watch", "watching",
     "a_eff", "t_eff",
     "ChromeTraceSink", "JsonlSink", "MemorySink", "NullSink",
     "Session", "current_session", "enabled", "metric", "region", "session",
+    "observe",
 ]

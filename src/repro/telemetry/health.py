@@ -1,0 +1,273 @@
+"""Runtime solve-health watchdogs: typed status, device probes, heartbeats.
+
+The solvers of :mod:`repro.solvers` run their whole iteration inside one
+``lax.while_loop`` under one ``shard_map`` — a run that goes wrong (a NaN
+from a bad coefficient on one rank, a stagnating preconditioner) is
+invisible until the loop exits at ``maxiter``.  This module adds the
+runtime half of the observability story:
+
+* :class:`SolveStatus` — a typed outcome carried on every
+  ``SolveInfo``/``PTInfo`` (always populated; classification is free);
+* :func:`watch` — opt-in DEVICE-side probes threaded through the solver
+  while-loop carry.  Non-finite detection piggybacks on the residual that
+  the loop already all-reduces (a NaN anywhere psums to every rank), so
+  the probes add ZERO extra collectives; stagnation/divergence
+  classification and early exit ride on the same replicated scalar.
+  With no watch installed the solvers trace the exact pre-existing
+  program — the lowered HLO is byte-identical
+  (``tests/test_telemetry.py`` pins it);
+* a throttled rank-0 :func:`jax.debug.callback` heartbeat emitting
+  structured per-iteration events into the sink stack of
+  :mod:`repro.telemetry.timers`, plus a per-rank final-health event that
+  lands in the flight recorder (:mod:`repro.telemetry.flight`).
+
+Usage::
+
+    from repro import telemetry as tele
+
+    with tele.watch(heartbeat_every=50, stagnation_window=100):
+        x, info = app.solve("cg", tol=1e-8)
+    info.status            # tele.SolveStatus.CONVERGED / DIVERGED_NONFINITE / ...
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import enum
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+class SolveStatus(enum.IntEnum):
+    """Typed outcome of an iterative solve.
+
+    ``RUNNING`` is the in-loop device value; a finished solve always
+    reports one of the terminal states.  ``failed`` distinguishes the
+    pathological exits (the flight recorder auto-dumps on them) from the
+    benign ``MAX_ITERATIONS``.
+    """
+
+    RUNNING = 0
+    CONVERGED = 1
+    MAX_ITERATIONS = 2
+    DIVERGED_NONFINITE = 3
+    STAGNATED = 4
+    DIVERGED = 5
+
+    @property
+    def failed(self) -> bool:
+        return self in (SolveStatus.DIVERGED_NONFINITE,
+                        SolveStatus.STAGNATED, SolveStatus.DIVERGED)
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Watchdog thresholds (hashable — joins the solver jit-cache keys).
+
+    ``stagnation_window`` — flag ``STAGNATED`` after this many
+    consecutive iterations without a relative improvement of at least
+    ``stagnation_rtol`` over the best residual so far (0 disables);
+    ``divergence_factor`` — flag ``DIVERGED`` once the residual exceeds
+    this multiple of the initial residual (0 disables);
+    ``heartbeat_every`` — emit a rank-0 heartbeat event every k
+    iterations (0 disables).  Non-finite detection and early exit are
+    always on while a watch is installed.
+    """
+
+    stagnation_window: int = 0
+    stagnation_rtol: float = 1e-3
+    divergence_factor: float = 0.0
+    heartbeat_every: int = 0
+
+
+_CURRENT: HealthConfig | None = None
+
+# residual-tail length carried into the per-rank final-health event
+TAIL = 8
+
+
+def current() -> HealthConfig | None:
+    """The installed watchdog config, or None (probes compiled out)."""
+    return _CURRENT
+
+
+def watching() -> bool:
+    return _CURRENT is not None
+
+
+@contextlib.contextmanager
+def watch(*, stagnation_window: int = 0, stagnation_rtol: float = 1e-3,
+          divergence_factor: float = 0.0, heartbeat_every: int = 0):
+    """Install solve-health watchdogs for the duration of the block.
+
+    Reentrant like :func:`repro.telemetry.session`: an inner ``watch``
+    joins the active config (its own thresholds are ignored).  Solvers
+    traced under a watch carry the probes in their while-loop state and
+    cache the program under a config-extended key, so watched and plain
+    solves coexist without retracing each other.
+    """
+    global _CURRENT
+    if _CURRENT is not None:
+        yield _CURRENT
+        return
+    cfg = HealthConfig(stagnation_window=stagnation_window,
+                       stagnation_rtol=stagnation_rtol,
+                       divergence_factor=divergence_factor,
+                       heartbeat_every=heartbeat_every)
+    _CURRENT = cfg
+    try:
+        yield cfg
+    finally:
+        _CURRENT = None
+
+
+# ---------------------------------------------------------------------------
+# device-side probes (traced inside the solver while_loop)
+# ---------------------------------------------------------------------------
+
+def linear_rank(topo):
+    """The traced linear rank of this shard (row-major over mesh dims)."""
+    dims = tuple(topo.dims)
+    r = jnp.zeros((), jnp.int32)
+    for d in range(len(dims)):
+        stride = int(math.prod(dims[d + 1:]))
+        r = r + topo.coord(d).astype(jnp.int32) * stride
+    return r
+
+
+def carry_init(res0):
+    """Initial (status, best_res, since_best) probe carry."""
+    return (jnp.full((), SolveStatus.RUNNING, jnp.int32),
+            res0,
+            jnp.zeros((), jnp.int32))
+
+
+def carry_ok(hc):
+    return hc[0] == SolveStatus.RUNNING
+
+
+def probe(cfg: HealthConfig, hc, res, res0):
+    """Classify the (already globally reduced) residual; sticky status.
+
+    ``res``/``res0`` are replicated scalars — every rank computes the
+    identical status with no additional communication.
+    """
+    status, best, since = hc
+    finite = jnp.isfinite(res)
+    improved = res < best * (1.0 - cfg.stagnation_rtol)
+    since = jnp.where(improved, 0, since + 1).astype(jnp.int32)
+    best = jnp.minimum(best, jnp.where(finite, res, best))
+    new = jnp.full((), SolveStatus.RUNNING, jnp.int32)
+    if cfg.divergence_factor > 0:
+        new = jnp.where(res > cfg.divergence_factor * res0,
+                        SolveStatus.DIVERGED, new)
+    if cfg.stagnation_window > 0:
+        new = jnp.where(since >= cfg.stagnation_window,
+                        SolveStatus.STAGNATED, new)
+    new = jnp.where(finite, new, SolveStatus.DIVERGED_NONFINITE)
+    status = jnp.where(status == SolveStatus.RUNNING, new, status)
+    return (status.astype(jnp.int32), best, since)
+
+
+def finalize(hc, res, bnorm, tol):
+    """Terminal device status once the loop has exited.
+
+    A non-finite residual can predate the first probe (NaN in the very
+    first residual exits the loop at k=0 — NaN comparisons are false),
+    so finiteness is re-checked here.
+    """
+    status = hc[0]
+    benign = jnp.where(res <= tol * bnorm,
+                       SolveStatus.CONVERGED, SolveStatus.MAX_ITERATIONS)
+    benign = jnp.where(jnp.isfinite(res), benign,
+                       SolveStatus.DIVERGED_NONFINITE)
+    return jnp.where(status == SolveStatus.RUNNING,
+                     benign.astype(jnp.int32), status)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat + final-health events (host callbacks from device code)
+# ---------------------------------------------------------------------------
+
+def _emit(event: dict, rank=None):
+    from .flight import record as _flight_record
+    from .timers import current_session
+
+    s = current_session()
+    if s is not None:
+        s.emit(dict(event))
+    else:
+        # no session: still land in the flight ring buffer directly
+        _flight_record(event, rank=rank)
+
+
+def _heartbeat_cb(solver, rank, k, relres):
+    _emit({"type": "heartbeat", "solver": solver, "rank": int(rank),
+           "iteration": int(k), "relres": float(relres)}, rank=int(rank))
+
+
+def _final_cb(solver, rank, k, relres, status, tail):
+    import numpy as np
+
+    _emit({"type": "health", "solver": solver, "rank": int(rank),
+           "iteration": int(k), "relres": float(relres),
+           "status": SolveStatus(int(status)).name,
+           "residual_tail": [float(v) for v in np.asarray(tail)]},
+          rank=int(rank))
+
+
+def maybe_heartbeat(cfg: HealthConfig, solver: str, topo, k, relres):
+    """Traced: rank-0, every ``cfg.heartbeat_every`` iterations."""
+    if not cfg.heartbeat_every:
+        return
+    rank = linear_rank(topo)
+    fire = (jnp.mod(k, cfg.heartbeat_every) == 0) & (rank == 0)
+
+    def emit():
+        jax.debug.callback(_heartbeat_cb, solver, rank, k, relres)
+        return jnp.zeros((), jnp.int32)
+
+    jax.lax.cond(fire, emit, lambda: jnp.zeros((), jnp.int32))
+
+
+def emit_final(solver: str, topo, k, relres, status, hist, maxiter: int):
+    """Traced: one per-rank final-health event (lands in the flight
+    recorder's per-rank ring buffer) with the residual tail."""
+    rank = linear_rank(topo)
+    n = min(TAIL, maxiter)
+    start = jnp.clip(k - n, 0, maxiter - n)
+    tail = jax.lax.dynamic_slice_in_dim(hist, start, n)
+    jax.debug.callback(_final_cb, solver, rank, k, relres, status, tail)
+
+
+# ---------------------------------------------------------------------------
+# host-side classification (works with or without a watch)
+# ---------------------------------------------------------------------------
+
+def classify(device_status: int | None, relres: float, tol: float,
+             iterations: int, maxiter: int) -> SolveStatus:
+    """Terminal :class:`SolveStatus` from host-side solve scalars.
+
+    Without device probes the classification is still informative: a NaN
+    residual exits the loop on its own (NaN comparisons are false), so
+    non-finite divergence is detected even unwatched — the probes add
+    stagnation/divergence detection, early-exit stickiness, and the
+    per-rank events.
+    """
+    if device_status is not None:
+        st = SolveStatus(int(device_status))
+        if st != SolveStatus.RUNNING:
+            return st
+    if not math.isfinite(relres):
+        return SolveStatus.DIVERGED_NONFINITE
+    if relres <= tol:
+        return SolveStatus.CONVERGED
+    return SolveStatus.MAX_ITERATIONS
+
+
+__all__ = ["HealthConfig", "SolveStatus", "carry_init", "carry_ok",
+           "classify", "current", "emit_final", "finalize", "linear_rank",
+           "maybe_heartbeat", "probe", "watch", "watching"]

@@ -43,6 +43,12 @@ class Session:
 
     def emit(self, event: dict):
         self.sink.emit(event)
+        # mirror into the flight recorder's per-rank ring buffer (a single
+        # None check when no recorder is installed)
+        from .flight import current as _flight_current
+        rec = _flight_current()
+        if rec is not None:
+            rec.record(event)
 
     def span(self, name: str, ts: float, dur: float, **attrs):
         self.emit({"type": "span", "name": name, "ts": ts, "dur": dur,

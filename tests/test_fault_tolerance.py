@@ -1,5 +1,9 @@
 """Fault-tolerance paths: NaN guard, straggler watchdog, elastic resume
-(checkpoint taken on one mesh, resumed on a different mesh layout)."""
+(checkpoint taken on one mesh, resumed on a different mesh layout), and
+the solver-side failure story: a NaN-poisoned two-rank solve must exit
+early with ``DIVERGED_NONFINITE``, leave one flight-record JSONL per
+rank behind, merge into a Perfetto trace via the diag CLI, and resume
+cleanly from a checkpoint taken before the failure."""
 
 import os
 import sys
@@ -132,3 +136,86 @@ print("OK elastic resume", loss_b, loss_ref)
         ndev=8,
         timeout=1200,
     )
+
+
+def test_nan_solve_flight_records_diag_and_resume():
+    """Two-rank CG with a NaN-poisoned coefficient: early exit with
+    DIVERGED_NONFINITE, one flight-record JSONL per rank, diag-CLI merge
+    into a Perfetto trace + imbalance report, and a clean checkpoint
+    resume afterwards."""
+    out = mp_run(
+        """
+import glob, io, json, os, tempfile
+import contextlib as cl
+jax.config.update("jax_enable_x64", True)
+from repro import ckpt, telemetry as tele
+from repro.apps.poisson import Poisson3D
+from repro.telemetry import diag
+
+out = tempfile.mkdtemp()
+fdir = os.path.join(out, "flight")
+app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 1, 1))
+c_good = app.c
+
+with tele.session(), tele.observe(heartbeat=5, flight_dir=fdir):
+    # healthy solve first; checkpoint the state it produced
+    x, good = app.solve(method="cg", tol=1e-8)
+    assert good.status == tele.SolveStatus.CONVERGED
+    ckpt.save({"x": x}, 1, out)
+
+    # poison ONE interior coefficient cell on rank 1 (stacked layout:
+    # the rank-1 block starts at row 10 of the (20, 10, 10) array)
+    c = np.array(app.c)
+    c[14, 4, 4] = np.nan
+    app.c = jnp.asarray(c)
+    x2, bad = app.solve(method="cg", tol=1e-8)
+    assert bad.status == tele.SolveStatus.DIVERGED_NONFINITE, bad.status
+    assert bad.iterations <= 1, bad.iterations      # early exit, not maxiter
+
+# one flight record per rank, dumped at failure time
+files = sorted(glob.glob(os.path.join(fdir, "flight-rank*.jsonl")))
+assert [os.path.basename(p) for p in files] == [
+    "flight-rank0000.jsonl", "flight-rank0001.jsonl"], files
+for p in files:
+    lines = [json.loads(ln) for ln in open(p)]
+    header, events = lines[0], lines[1:]
+    assert header["type"] == "flight_header"
+    assert header["reason"] == "status:DIVERGED_NONFINITE"
+    assert header["n_events"] == len(events)
+    assert "host_peak_rss_kb" in header["memory"]
+    # every rank left its device-side final-health verdict behind
+    finals = [e for e in events if e.get("type") == "health"]
+    assert any(e["status"] == "DIVERGED_NONFINITE" for e in finals), p
+# the host-side solve summary (rank 0) carries the residual tail
+ev0 = [json.loads(ln) for ln in open(files[0])][1:]
+solves = [e for e in ev0 if e.get("type") == "solve"]
+assert any(e["status"] == "DIVERGED_NONFINITE" for e in solves)
+assert any(e["status"] == "CONVERGED" for e in solves)  # the healthy one
+
+# diag CLI: merge into one clock-aligned Perfetto trace + imbalance report
+trace_path = os.path.join(out, "trace.json")
+buf = io.StringIO()
+with cl.redirect_stdout(buf):
+    rc = diag.main([fdir, "--out", trace_path])
+assert rc == 0
+report = buf.getvalue()
+assert "imbalance" in report
+trace = json.load(open(trace_path))
+evs = trace["traceEvents"]
+assert {e["pid"] for e in evs} == {0, 1}          # both ranks merged
+assert any(e["ph"] == "X" for e in evs)           # spans survived
+assert any(e["ph"] == "i" for e in evs)           # health/heartbeat instants
+
+# checkpoint resume: heal the coefficient, restore the good state, and
+# restart clean — warm-started CG reconverges immediately
+app.c = c_good
+state = ckpt.restore({"x": x}, 1, out)
+x3, info3 = app.solve(method="cg", tol=1e-8, x0=state["x"])
+assert info3.status == tele.SolveStatus.CONVERGED
+assert info3.iterations <= 5, info3.iterations    # warm start: near-instant
+print("OK nan flight diag resume")
+""",
+        ndev=2,
+        timeout=900,
+    )
+    assert "OK nan flight diag resume" in out

@@ -104,6 +104,141 @@ def test_sinks_serialize():
     assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
 
 
+def test_chrome_trace_sink_perfetto_loadable(tmp_path):
+    """ChromeTraceSink output is Perfetto-loadable: valid JSON, complete
+    events with non-negative monotone timestamps, consistent pid/tid."""
+    from repro.telemetry import ChromeTraceSink, metric, region, session
+
+    path = tmp_path / "trace.json"
+    sink = ChromeTraceSink(str(path))
+    with session(sink=sink):
+        with region("a"):
+            with region("b"):
+                pass
+            metric("m", 1.0)
+        with region("c"):
+            pass
+    sink.close()
+    trace = json.loads(path.read_text())   # must parse as one JSON doc
+    assert trace["displayTimeUnit"] == "ms"
+    evs = trace["traceEvents"]
+    assert all(e["ph"] in ("X", "i") for e in evs)
+    for e in evs:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e)
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        assert e["ts"] >= 0
+    assert len({(e["pid"], e["tid"]) for e in evs}) == 1  # one rank here
+    spans = {e["name"]: e for e in evs if e["ph"] == "X"}
+    assert set(spans) == {"a", "b", "c"}
+    assert all(e["dur"] >= 0 for e in spans.values())
+    # spans nest/order consistently on the session clock
+    assert spans["a"]["ts"] <= spans["b"]["ts"]
+    assert spans["b"]["ts"] + spans["b"]["dur"] \
+        <= spans["a"]["ts"] + spans["a"]["dur"] + 1.0   # µs slack
+    assert spans["c"]["ts"] >= spans["a"]["ts"] + spans["a"]["dur"] - 1.0
+    # the metric instant falls inside its enclosing span
+    (inst,) = [e for e in evs if e["ph"] == "i"]
+    assert spans["a"]["ts"] <= inst["ts"] \
+        <= spans["a"]["ts"] + spans["a"]["dur"] + 1.0
+
+
+def test_jsonl_sink_empty_session_and_close_twice(tmp_path):
+    from repro.telemetry import JsonlSink, session
+
+    empty = tmp_path / "empty.jsonl"
+    sink = JsonlSink(str(empty))
+    with session(sink=sink):
+        pass
+    sink.close()
+    sink.close()                      # idempotent, must not raise
+    assert empty.read_text() == ""    # empty session -> empty file
+
+    full = tmp_path / "one.jsonl"
+    sink2 = JsonlSink(str(full))
+    with session(sink=sink2) as s:
+        s.metric("x", 1.5)
+    sink2.close()
+    sink2.close()
+    lines = full.read_text().splitlines()
+    assert len(lines) == 1
+    ev = json.loads(lines[0])
+    assert ev["type"] == "metric" and ev["name"] == "x" and ev["value"] == 1.5
+
+
+def test_flight_recorder_composes_with_sessions(tmp_path):
+    """flight() is reentrant, mirrors (not steals) session events into
+    the per-rank ring buffer, and respects the ring capacity."""
+    from repro.telemetry import MemorySink, current_session, flight, \
+        region, session
+    from repro.telemetry.flight import current as flight_current
+
+    sink = MemorySink()
+    with session(sink=sink) as s:
+        with flight(str(tmp_path), capacity=4) as rec:
+            with flight(str(tmp_path / "ignored")) as rec2:
+                assert rec2 is rec               # inner joins the outer
+            assert flight_current() is rec       # inner exit: no teardown
+            with region("r1"):
+                with region("r2"):
+                    pass
+            assert current_session() is s        # session still the outer one
+            for i in range(10):
+                rec.record({"type": "tick", "i": i})
+        assert flight_current() is None
+    # session sink saw the spans untouched (mirroring, not rerouting)
+    assert [e["name"] for e in sink.events if e["type"] == "span"] \
+        == ["r2", "r1"]
+    # ring buffer bounded at capacity, keeping the newest events
+    evs = rec.events(rec.host_rank)
+    assert len(evs) == 4
+    assert [e["i"] for e in evs] == [6, 7, 8, 9]
+    # clean exit, no failure -> nothing dumped
+    assert rec.dump_count == 0 and not list(tmp_path.glob("flight-*.jsonl"))
+
+
+def test_flight_recorder_dumps_on_exception(tmp_path):
+    from repro.telemetry import flight
+
+    try:
+        with flight(str(tmp_path), meta={"app": "t"}) as rec:
+            rec.record({"type": "tick", "i": 0})
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    (path,) = sorted(tmp_path.glob("flight-rank*.jsonl"))
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    header, events = lines[0], lines[1:]
+    assert header["type"] == "flight_header"
+    assert header["reason"] == "exception:RuntimeError"
+    assert header["meta"] == {"app": "t"}
+    assert "host_peak_rss_kb" in header["memory"]
+    kinds = [e["type"] for e in events]
+    assert kinds == ["tick", "exception"]
+    assert "boom" in events[-1]["error"]
+
+
+def test_observe_composes_flight_and_watch(tmp_path):
+    """tele.observe() = flight + watch, each reentrant; a no-op with
+    neither requested."""
+    from repro import telemetry as tele
+    from repro.telemetry.flight import current as flight_current
+
+    with tele.observe():                          # no-op block
+        assert flight_current() is None and not tele.watching()
+    with tele.observe(heartbeat=5, flight_dir=str(tmp_path),
+                      stagnation_window=7):
+        assert tele.watching()
+        from repro.telemetry import health
+        cfg = health.current()
+        assert cfg.heartbeat_every == 5 and cfg.stagnation_window == 7
+        rec = flight_current()
+        assert rec is not None
+        with tele.observe(heartbeat=50, flight_dir=str(tmp_path / "x")):
+            assert health.current() is cfg        # inner observe joins
+            assert flight_current() is rec
+    assert flight_current() is None and not tele.watching()
+
+
 def test_region_noop_without_session():
     from repro.telemetry import current_session, enabled, region
 
@@ -293,6 +428,107 @@ def test_zero_cost_when_disabled():
             app.solve(method="cg", tol=1e-8)      # adds nothing
             n2 = len(app.grid._jit_cache)
         assert n1 == n0 + 1 and n2 == n1, (n0, n1, n2)
+        print("ok")
+    """)
+    assert "ok" in out
+
+
+def test_zero_cost_health_probes_when_unwatched():
+    """Solver HLO with a session (no watch) is byte-identical to the
+    plain lowering; a watch() compiles a separate program under its own
+    cache key without invalidating the plain one."""
+    out = run("""
+        jax.config.update("jax_enable_x64", True)
+        from repro import telemetry as tele
+        from repro.apps.poisson import Poisson3D
+
+        app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+        app.solve(method="cg", tol=1e-8)
+        key, = [k for k in app.grid._jit_cache if k[0] == "solvers.cg"]
+        assert key[-1] is None          # no HealthConfig in the plain key
+        jf = app.grid._jit_cache[key]
+        x0 = jnp.zeros_like(app.b)
+        plain = jf.lower(app.b, x0, app.c).as_text()
+
+        # re-lowering under an active session + counting must not change
+        # one instruction — the health probes are compiled out entirely
+        with tele.session(), tele.counting():
+            instrumented = jf.lower(app.b, x0, app.c).as_text()
+        assert plain == instrumented, "health probes leaked into plain HLO"
+
+        # a watch retraces under a config-extended key; the plain entry
+        # survives untouched and the watched program differs (the carry
+        # gains the probe state)
+        n0 = len(app.grid._jit_cache)
+        with tele.watch(heartbeat_every=10):
+            _, info = app.solve(method="cg", tol=1e-8)
+        assert info.status == tele.SolveStatus.CONVERGED
+        wkeys = [k for k in app.grid._jit_cache
+                 if k[0] == "solvers.cg" and k[-1] is not None]
+        assert len(wkeys) == 1 and len(app.grid._jit_cache) == n0 + 1
+        watched = app.grid._jit_cache[wkeys[0]].lower(
+            app.b, x0, app.c).as_text()
+        assert watched != plain
+        assert jf.lower(app.b, x0, app.c).as_text() == plain
+        print("ok")
+    """)
+    assert "ok" in out
+
+
+def test_health_statuses_and_heartbeats():
+    """Device-side probes: CONVERGED with rank-0 heartbeats + one final
+    health event per rank, MAX_ITERATIONS, and STAGNATED early exit."""
+    out = run("""
+        jax.config.update("jax_enable_x64", True)
+        from repro import telemetry as tele
+        from repro.apps.poisson import Poisson3D
+
+        app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+
+        # host classification is always on, even unwatched
+        _, plain = app.solve(method="cg", tol=1e-8)
+        assert plain.status == tele.SolveStatus.CONVERGED
+
+        sink = tele.MemorySink()
+        with tele.session(sink=sink), tele.watch(heartbeat_every=10):
+            _, w = app.solve(method="cg", tol=1e-8)
+        jax.effects_barrier()
+        assert w.status == tele.SolveStatus.CONVERGED
+        assert w.iterations == plain.iterations   # probes don't change math
+        assert np.isclose(w.relres, plain.relres)
+
+        hb = [e for e in sink.events if e.get("type") == "heartbeat"]
+        assert hb, "no heartbeat events"
+        assert all(e["rank"] == 0 for e in hb)          # rank-0 throttled
+        assert all(e["iteration"] % 10 == 0 for e in hb)
+        assert len(hb) == w.iterations // 10
+        assert all(np.isfinite(e["relres"]) for e in hb)
+
+        finals = [e for e in sink.events if e.get("type") == "health"]
+        assert {e["rank"] for e in finals} == set(range(8))  # every rank
+        assert all(e["status"] == "CONVERGED" for e in finals)
+        assert all(len(e["residual_tail"]) == 8 for e in finals)
+        assert np.isclose(finals[0]["residual_tail"][-1], w.relres)
+
+        # benign maxiter exit
+        with tele.watch():
+            _, m = app.solve(method="cg", tol=1e-14, maxiter=3)
+        assert m.status == tele.SolveStatus.MAX_ITERATIONS
+        assert m.iterations == 3
+
+        # stagnation: demand 10x improvement every 5 iterations — CG
+        # can't, so the watchdog exits the loop early
+        with tele.watch(stagnation_window=5, stagnation_rtol=0.9):
+            _, s = app.solve(method="cg", tol=1e-30, maxiter=500)
+        assert s.status == tele.SolveStatus.STAGNATED
+        assert s.iterations < 20, s.iterations
+
+        # the probes ride along in mg and pt too
+        with tele.watch(heartbeat_every=50):
+            _, img = app.solve(method="mg", tol=1e-8)
+            _, ipt = app.solve(method="pt", tol=1e-8)
+        assert img.status == tele.SolveStatus.CONVERGED
+        assert ipt.status == tele.SolveStatus.CONVERGED
         print("ok")
     """)
     assert "ok" in out
