@@ -39,6 +39,12 @@ SOLVER_CEILINGS = {
     "cg/f64@5": 97,    # recorded 69 (tol 1e-5)
     "cg/f32": 104,     # recorded 74 (f32 rounding costs a few iterations)
     "mgcg/f32": 12,    # recorded 8
+    # fused-kernel rows (PR 8): the jacobi rows run a FIXED sweep count,
+    # so the ceiling is exact; mgcg/fused is the dispatched mgcg solve
+    # (same algorithm as mgcg -> same recorded 10 + headroom)
+    "jacobi/unfused": 60,
+    "jacobi/fused": 60,
+    "mgcg/fused": 14,
 }
 
 # quick stokes_bench (14^3 global): velocity-block solve to 1e-8

@@ -29,6 +29,15 @@ Two derived rows:
   vs plain wall time of the quick mgcg solve; the acceptance bar is
   < 2% (the counters are trace-time only and the comm re-trace is
   cached, so repeat instrumented solves run the same executable).
+
+The fused-kernel rows (``jacobi/unfused`` / ``jacobi/fused`` /
+``mgcg/fused``) measure the ``kernels/solver3d`` hot path behind the
+shared ``use_kernel`` dispatch: a fixed 60-sweep Jacobi block spelled
+multi-pass (residual materialized between compiled passes) vs single-pass
+through the dispatched kernel, and the end-to-end MG-preconditioned CG in
+its dispatched configuration.  On CPU hosts ``auto`` resolves to the
+single-jit reference (interpret mode is a correctness tool, ~7x slower);
+on TPU backends the same rows exercise the compiled Pallas kernels.
 """
 
 from __future__ import annotations
@@ -91,6 +100,103 @@ app32 = Poisson3D(nx={nx}, ny={nx}, nz={nx}, dims=DIMS, dtype=jnp.float32)
 for label, a, method in [("cg/f64@5", app, "cg"), ("cg/f32", app32, "cg"),
                          ("mgcg/f32", app32, "mgcg")]:
     rows[label] = bench(a, method, {f32_tol})
+
+# fused smoother hot path: a fixed 60-sweep damped-Jacobi block (the
+# dominant work of every V-cycle), measured two ways.  "unfused" is the
+# historical multi-pass spelling -- the residual materialized by one
+# compiled pass, the scaled update + halo exchange by another, so the
+# intermediate field round-trips memory every sweep.  "fused" runs the
+# whole sweep through the dispatched kernel path
+# (repro.kernels.solver3d, use_kernel="auto": the Pallas kernel on TPU
+# backends, the single-pass reference elsewhere) inside ONE compiled
+# fori_loop.  Fixed sweep count: T_eff is pure hardware efficiency and
+# `converged` is vacuous.
+from repro.kernels.solver3d import ops as kops
+from repro.kernels.solver3d import ref as kref
+
+NSWEEP = 60
+OMEGA = 6.0 / 7.0
+g = app.grid
+sp = app.spacing
+
+def _fused_local(u, c, f):
+    dia = kref.full_diag(c, sp)
+    def body(_, u):
+        with tele.tag("iteration"):
+            return g.update_halo(kops.jacobi_sweep(
+                u, c, f, dia, omega=OMEGA, spacing=sp, use_kernel="auto"))
+    return jax.lax.fori_loop(0, NSWEEP, body, u)
+
+def _resid_local(u, c, f):
+    with tele.tag("iteration"):
+        return kref.residual_op_ref(u, c, f, sp)
+
+def _update_local(u, r, c):
+    with tele.tag("iteration"):
+        return g.update_halo(u + OMEGA * r / kref.full_diag(c, sp))
+
+def _sm(fn):
+    return jax.shard_map(fn, mesh=g.mesh, in_specs=(g.spec,) * 3,
+                         out_specs=g.spec, check_vma=False)
+
+fused_sm, resid_sm, update_sm = _sm(_fused_local), _sm(_resid_local), _sm(_update_local)
+fused_j, resid_j, update_j = jax.jit(fused_sm), jax.jit(resid_sm), jax.jit(update_sm)
+u0, cc, ff = app.b, app.c, app.b
+
+def run_fused():
+    return fused_j(u0, cc, ff).block_until_ready()
+
+def run_unfused():
+    # Block after EVERY pass: the naive multi-pass driver is
+    # host-synchronous, and overlapping two in-flight shard_map
+    # executables with collectives deadlocks XLA:CPU's rendezvous
+    # (device threads parked in one executable's collective starve
+    # the other's compute).
+    u = u0
+    for _ in range(NSWEEP):
+        r = resid_j(u, cc, ff)
+        r.block_until_ready()
+        u = update_j(u, r, cc)
+        u.block_until_ready()
+    return u
+
+def smoother_row(run_fn, per_sweep):
+    run_fn()                                    # warm-up (compile)
+    walls = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        run_fn()
+        walls.append(time.perf_counter() - t0)
+    wall = min(walls)
+    tot = per_sweep.scaled_sum(per_sweep, NSWEEP - 1)   # per_sweep * NSWEEP
+    n = 1
+    for s in g.global_shape:
+        n *= int(s)
+    a_eff = tele.a_eff(n, n_unknown_fields=1, n_known_fields=2,
+                       itemsize=jnp.dtype(app.dtype).itemsize)
+    return dict(
+        iters=NSWEEP, relres=0.0, converged=True, wall_s=wall,
+        s_per_iter=wall / NSWEEP,
+        t_eff_gbs=float(tele.t_eff(a_eff, wall / NSWEEP)),
+        halo_bytes=int(tot.halo_bytes),
+        halo_exchanges=int(tot.halo_exchanges),
+        all_reduces=int(tot.all_reduces),
+        all_reduces_per_iter=int(per_sweep.all_reduces),
+        halo_bytes_per_iter=int(per_sweep.halo_bytes),
+        residual_first=None, residual_last=None,
+    )
+
+per_fused = tele.count_comm(fused_sm, u0, cc, ff).per_iteration
+per_unfused = tele.count_comm(resid_sm, u0, cc, ff).per_iteration \
+    .scaled_sum(tele.count_comm(update_sm, u0, u0, cc).per_iteration, 1)
+rows["jacobi/unfused"] = smoother_row(run_unfused, per_unfused)
+rows["jacobi/fused"] = smoother_row(run_fused, per_fused)
+
+# the dispatch-wired MG-preconditioned CG: identical executable to the
+# "mgcg" row on CPU hosts (auto resolves to the reference), the fused
+# Pallas cycle on TPU backends -- recorded as its own row so the
+# trajectory gate tracks the fused path explicitly across backends.
+rows["mgcg/fused"] = bench(app, "mgcg", {tol})
 
 # comm/compute split of a CG iteration via hide_apply on/off: the hidden
 # variant overlaps the exchange, so the per-iteration delta is the

@@ -17,8 +17,7 @@ import numpy as np
 
 from repro import telemetry as tele
 from repro.core import ImplicitGlobalGrid, init_global_grid
-from repro.kernels.stencil3d import heat_step_ref
-from repro.kernels.stencil3d.kernel import heat_step_pallas
+from repro.kernels.stencil3d.ops import heat_step
 from repro.stencil import fd3d as fd
 
 
@@ -31,7 +30,8 @@ class Heat3D:
     c0: float = 2.0
     lx: float = 1.0
     hide: tuple | None = (16, 2, 2)   # paper's @hide_communication tuple
-    use_kernel: str = "ref"           # ref | interpret | pallas
+    use_kernel: str = "auto"          # auto | pallas | interpret | ref
+    bx: int | None = None             # kernel x-block (None = auto divisor)
     dims: tuple | None = None
     dtype: object = jnp.float32
     heartbeat: int = 0      # rank-0 heartbeat event every k solver iterations
@@ -49,10 +49,8 @@ class Heat3D:
         lam, dt, dx, dy, dz = self.lam, self.dt, self.dx, self.dy, self.dz
 
         def step(T, Ci):
-            if self.use_kernel == "ref":
-                return heat_step_ref(T, Ci, lam, dt, dx, dy, dz)
-            return heat_step_pallas(T, Ci, lam, dt, dx, dy, dz,
-                                    interpret=self.use_kernel == "interpret")
+            return heat_step(T, Ci, lam, dt, dx, dy, dz,
+                             use_kernel=self.use_kernel, bx=self.bx)
 
         if self.hide is not None:
             # clamp the shell width so 2*(w+h) fits the local extent

@@ -47,6 +47,8 @@ class Poisson3D:
     dtype: object = jnp.float64
     heartbeat: int = 0      # rank-0 heartbeat event every k solver iterations
     flight_dir: str | None = None  # per-rank flight-record dump directory
+    use_kernel: str = "auto"  # fused Pallas hot path: auto|pallas|interpret|ref
+    bx: int | None = None   # kernel x-block size (None = largest divisor <= 8)
 
     def __post_init__(self):
         if self.dtype == jnp.float64 and not jax.config.jax_enable_x64:
@@ -112,13 +114,17 @@ class Poisson3D:
     # operator (local view)
     # ------------------------------------------------------------------
     def apply_A(self, u, c):
-        return poisson_apply(self.grid, u, c, self.spacing)
+        return poisson_apply(self.grid, u, c, self.spacing,
+                             use_kernel=self.use_kernel, bx=self.bx)
 
     def apply_A_overlap(self, u, c):
         """Same operator with the halo exchange overlapped against the
         bulk stencil (``hide_apply``); identical arithmetic (shell cells
-        may round differently by ~1 ulp)."""
-        return poisson_apply(self.grid, u, c, self.spacing, hide=True)
+        may round differently by ~1 ulp).  The overlapped split is not
+        kernelized — ``use_kernel="auto"`` quietly keeps the ref path
+        here (an explicit kernel request raises)."""
+        return poisson_apply(self.grid, u, c, self.spacing, hide=True,
+                             use_kernel=self.use_kernel, bx=self.bx)
 
     def spectral_bounds(self) -> tuple[float, float]:
         """(lam_min, lam_max) estimates for the pseudo-transient solver.
@@ -187,7 +193,8 @@ class Poisson3D:
         if method == "mgcg":
             if not hasattr(self, "_mg_precond"):
                 self._mg_precond = solvers.CyclePreconditioner(
-                    self.grid, self.spacing)
+                    self.grid, self.spacing,
+                    use_kernel=self.use_kernel, bx=self.bx)
             return solvers.cg(
                 self.grid, apply_A, self.b, tol=tol,
                 maxiter=maxiter or 2000, args=(self.c,),
@@ -210,6 +217,8 @@ class Poisson3D:
                 raise ValueError(
                     "overlap=True is not supported for 'mg' (the V-cycle "
                     "manages its own halo updates)")
+            kw.setdefault("use_kernel", self.use_kernel)
+            kw.setdefault("bx", self.bx)
             return solvers.multigrid_solve(
                 self.grid, self.c, self.b, self.spacing, tol=tol,
                 maxiter=maxiter or 100, **kw)

@@ -1,0 +1,137 @@
+"""Shared ``use_kernel`` dispatch for the Pallas kernel families.
+
+One contract for every fused op (``kernels/stencil3d``,
+``kernels/solver3d``)::
+
+    use_kernel = "auto" | "pallas" | "interpret" | "ref"
+
+* ``"ref"`` — always the pure-jnp reference spelling.
+* ``"auto"`` — the Pallas kernel when a CAPABILITY PROBE passes
+  (TPU backend, supported dtype, 3-D field, x extent divisible by the
+  block size), otherwise a graceful fallback to ``"ref"``.  Auto NEVER
+  raises: a probe failure that would have been a crash on the explicit
+  path (e.g. ``nx % bx != 0`` on an odd rank count or a coarse MG
+  level) degrades to the reference with a one-time warning instead.
+* ``"pallas"`` / ``"interpret"`` — the kernel is demanded explicitly;
+  a failed probe is a programming error and raises ``ValueError`` (this
+  preserves the historical ``heat_step`` contract).
+
+:func:`resolve` is the single entry point; it returns the concrete
+implementation (``"pallas"``, ``"interpret"`` or ``"ref"``) plus the
+block size to use.  It runs at trace time (plain Python), so the choice
+is baked into the jitted program and costs nothing at run time.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+MODES = ("auto", "pallas", "interpret", "ref")
+
+# Compiled TPU kernels: no f64 (TPU VPU) — interpret mode (plain XLA
+# ops on the host backend) additionally handles f64.
+PALLAS_DTYPES = ("float32", "bfloat16")
+INTERPRET_DTYPES = ("float32", "bfloat16", "float16", "float64")
+
+_WARNED: set = set()
+
+
+def warn_once(key, msg: str) -> None:
+    """One warning per (reason, site) pair per process — auto fallbacks
+    must be visible but must not spam a 100-sweep smoother loop."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def reset_warnings() -> None:
+    """Forget warn-once state (tests)."""
+    _WARNED.clear()
+
+
+def pick_bx(nx: int, limit: int = 8) -> int | None:
+    """Largest x-block extent ``<= limit`` dividing ``nx`` (None if only
+    a degenerate 1-row block would fit).  Keeps the default usable on
+    every MG level: the coarsest local extents (6, 4) pick 6 and 4
+    instead of crashing on the fine-level default of 8."""
+    for b in range(min(limit, nx), 1, -1):
+        if nx % b == 0:
+            return b
+    return None
+
+
+def resolve(use_kernel: str, *, shape, dtype, bx: int | None = None,
+            backend: str | None = None, unsupported: str | None = None,
+            where: str = "kernel") -> tuple[str, int | None]:
+    """Resolve ``use_kernel`` to ``(impl, bx)``.
+
+    ``impl`` is ``"pallas"``, ``"interpret"`` or ``"ref"``; ``bx`` is the
+    x-block extent for the kernel paths (None for ref).  ``unsupported``
+    names a feature the kernels do not implement (Helmholtz shift,
+    hidden/overlapped apply, ...): auto falls back to ref silently —
+    it is an architectural limit, not a broken configuration — while an
+    explicit kernel request raises.  ``backend`` overrides
+    ``jax.default_backend()`` (tests probe the TPU path from CPU).
+    """
+    if use_kernel not in MODES:
+        raise ValueError(f"unknown use_kernel={use_kernel!r}; pick from {MODES}")
+    if use_kernel == "ref":
+        return "ref", None
+    dtype = str(jnp_dtype(dtype))
+    nx = int(shape[0]) if len(shape) else 0
+
+    if use_kernel == "auto":
+        if unsupported is not None:
+            return "ref", None
+        if backend is None:
+            import jax
+            backend = jax.default_backend()
+        if backend != "tpu":
+            # CPU/GPU backends run the reference spelling; this is the
+            # normal non-TPU configuration, not a degraded one.
+            return "ref", None
+        if len(shape) != 3:
+            warn_once((where, "ndim", len(shape)),
+                      f"{where}: use_kernel='auto' needs a 3-D field, got "
+                      f"{len(shape)}-D — falling back to the reference")
+            return "ref", None
+        if dtype not in PALLAS_DTYPES:
+            warn_once((where, "dtype", dtype),
+                      f"{where}: use_kernel='auto' on TPU supports "
+                      f"{PALLAS_DTYPES}, got {dtype} — falling back to the "
+                      f"reference")
+            return "ref", None
+        b = bx if bx is not None else pick_bx(nx)
+        if b is None or nx % b != 0:
+            warn_once((where, "divisibility", nx, b),
+                      f"{where}: local extent nx={nx} is not divisible by "
+                      f"block bx={b} — falling back to the reference "
+                      f"(pass bx=None to auto-pick a divisor)")
+            return "ref", None
+        return "pallas", b
+
+    # explicit "pallas" / "interpret": probe failures raise
+    if unsupported is not None:
+        raise ValueError(
+            f"{where}: use_kernel={use_kernel!r} does not support "
+            f"{unsupported} (use 'ref' or 'auto')")
+    if len(shape) != 3:
+        raise ValueError(
+            f"{where}: use_kernel={use_kernel!r} needs a 3-D field, got "
+            f"shape {tuple(shape)}")
+    allowed = PALLAS_DTYPES if use_kernel == "pallas" else INTERPRET_DTYPES
+    if dtype not in allowed:
+        raise ValueError(
+            f"{where}: use_kernel={use_kernel!r} supports dtypes {allowed}, "
+            f"got {dtype}")
+    b = bx if bx is not None else (pick_bx(nx) or 1)
+    if nx % b != 0:
+        raise ValueError(f"nx={nx} must be divisible by block bx={b}")
+    return use_kernel, b
+
+
+def jnp_dtype(dtype):
+    import jax.numpy as jnp
+
+    return jnp.dtype(dtype)

@@ -1,0 +1,15 @@
+"""Fused solver hot-path kernels (smoother sweep + operator/residual).
+
+Mirrors ``kernels/stencil3d``: ``kernel.py`` holds the
+``pl.pallas_call`` bodies (x-blocked VMEM tiles, wrap-mapped ghost
+rows), ``ref.py`` the pure-jnp reference spellings — the SAME arithmetic
+``repro.solvers.multigrid`` runs, imported from here so the two can
+never drift — and ``ops.py`` the public entry points behind the shared
+``use_kernel`` dispatch of :mod:`repro.kernels.dispatch`.
+"""
+
+from .ops import apply_op, cheb_sweep, jacobi_sweep, residual_op
+from .ref import full_diag
+
+__all__ = ["apply_op", "residual_op", "jacobi_sweep", "cheb_sweep",
+           "full_diag"]

@@ -1,0 +1,166 @@
+"""Reference (pure-jnp) spellings of the fused solver hot path.
+
+This module is the CANONICAL spelling of the solver-stack arithmetic:
+
+* :func:`poisson_stencil` / :func:`poisson_diag` — the flux-form
+  variable-coefficient Poisson operator on cell centers.
+  ``repro.solvers.multigrid`` imports these (its historical
+  ``_poisson_stencil``), so the solver ref path and the kernel oracle
+  are literally the same function — they cannot drift apart.
+* the face-located operator delegates to :mod:`repro.stencil.mac`
+  (``stripped_component``), the one MAC spelling shared with the Stokes
+  operator and oracle.
+* :func:`jacobi_sweep_ref` / :func:`cheb_sweep_ref` /
+  :func:`residual_op_ref` — the smoother/residual compositions exactly
+  as ``make_v_cycle`` spells them (same op order, same ``at[].add``
+  forms), so the fused kernels can be pinned BITWISE against them in
+  interpret mode.
+
+Diagonals are passed FULL-SHAPE everywhere (:func:`full_diag`: ones on
+the ring / masked-out cells, so division is always safe); on the center
+interior the values equal :func:`poisson_diag` exactly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import locations as _loc
+from repro.stencil import mac as _mac
+
+_INNER3 = (slice(1, -1),) * 3
+
+
+def _sl(nd: int, d: int, start, stop) -> tuple:
+    s = [slice(1, -1)] * nd
+    s[d] = slice(start, stop)
+    return tuple(s)
+
+
+def _inner(nd: int) -> tuple:
+    return (slice(1, -1),) * nd
+
+
+def _shift(a, d: int, s: int):
+    """Interior-of-other-dims slab shifted by ``s`` along dim ``d``."""
+    n = a.shape[d]
+    return a[_sl(a.ndim, d, 1 + s, n - 1 + s)]
+
+
+# ---------------------------------------------------------------------------
+# operators (center + face), as multigrid spells them
+# ---------------------------------------------------------------------------
+
+def poisson_stencil(u, c, spacing, shift=None):
+    """The flux-form stencil of halo-consistent ``u`` (no communication).
+
+    ``shift`` (optional cell-centered field) adds a Helmholtz diagonal:
+    ``shift * u - div(c grad u)``.
+    """
+    nd = u.ndim
+    u0 = u[_inner(nd)]
+    c0 = c[_inner(nd)]
+    acc = jnp.zeros_like(u0)
+    for d in range(nd):
+        up, um = _shift(u, d, +1), _shift(u, d, -1)
+        cp, cm = _shift(c, d, +1), _shift(c, d, -1)
+        cf_p = 0.5 * (c0 + cp)
+        cf_m = 0.5 * (c0 + cm)
+        acc = acc + (cf_p * (up - u0) - cf_m * (u0 - um)) / spacing[d] ** 2
+    out = -acc if shift is None else shift[_inner(nd)] * u0 - acc
+    return jnp.zeros_like(u).at[_inner(nd)].set(out)
+
+
+def poisson_diag(c, spacing):
+    """Interior diagonal of the flux-form operator (for Jacobi)."""
+    nd = c.ndim
+    c0 = c[_inner(nd)]
+    dia = jnp.zeros_like(c0)
+    for d in range(nd):
+        cf_p = 0.5 * (c0 + _shift(c, d, +1))
+        cf_m = 0.5 * (c0 + _shift(c, d, -1))
+        dia = dia + (cf_p + cf_m) / spacing[d] ** 2
+    return dia
+
+
+def face_stencil(u, c, spacing, sd: int):
+    """``-div(c grad u)`` for ``u`` staggered along ``sd`` (unmasked)."""
+    return _mac.stripped_component(jnp, u, c, spacing, sd)
+
+
+def face_diag(c, spacing, sd: int):
+    """Diagonal of :func:`face_stencil` (full local shape)."""
+    return _mac.stripped_diag_component(jnp, c, spacing, sd)
+
+
+def full_diag(c, spacing, loc: str = "center", imask=None):
+    """Full-shape, safe-to-divide smoother diagonal for ``loc``.
+
+    Center: the interior diagonal with ONES on the ring (the ring is
+    never updated, so the value only has to be nonzero).  Face: the
+    masked form ``dia * imask + (1 - imask)`` — identical to the
+    ``dias`` arrays ``make_v_cycle`` builds for its face branch.
+    """
+    sd = _loc.stagger_dim(loc)
+    if sd is None:
+        return jnp.ones_like(c).at[_inner(c.ndim)].set(poisson_diag(c, spacing))
+    if imask is None:
+        raise ValueError(f"full_diag(loc={loc!r}) needs the interior mask")
+    return face_diag(c, spacing, sd) * imask + (1.0 - imask)
+
+
+# ---------------------------------------------------------------------------
+# fused-op references: operator apply, residual, smoother sweeps
+# ---------------------------------------------------------------------------
+
+def apply_op_ref(u, c, spacing, loc: str = "center"):
+    """``A u``: zero-ring interior stencil at centers, RAW (unmasked)
+    roll-form stencil on faces — exactly what multigrid consumes."""
+    sd = _loc.stagger_dim(loc)
+    if sd is None:
+        return poisson_stencil(u, c, spacing)
+    return face_stencil(u, c, spacing, sd)
+
+
+def residual_op_ref(u, c, f, spacing, loc: str = "center", imask=None):
+    """``f - A u`` on the location's unknowns, zero elsewhere — the
+    ``residual`` closure of ``make_v_cycle``, spelled identically."""
+    sd = _loc.stagger_dim(loc)
+    if sd is None:
+        Au = poisson_stencil(u, c, spacing)
+        r = f[_INNER3] - Au[_INNER3]
+        return jnp.zeros_like(u).at[_INNER3].set(r)
+    return (f - face_stencil(u, c, spacing, sd)) * imask
+
+
+def jacobi_sweep_ref(u, c, f, dia, *, omega, spacing, loc: str = "center",
+                     imask=None):
+    """One damped-Jacobi sweep ``u + omega * D^-1 (f - A u)`` (no halo
+    update — the caller owns communication, as in the cycle)."""
+    sd = _loc.stagger_dim(loc)
+    r = residual_op_ref(u, c, f, spacing, loc, imask)
+    if sd is None:
+        return u.at[_INNER3].add(omega * r[_INNER3] / dia[_INNER3])
+    return u + omega * r / dia
+
+
+def cheb_sweep_ref(u, c, f, dia, d, *, a, b, spacing, loc: str = "center",
+                   imask=None):
+    """One Chebyshev recurrence step -> ``(u, d)``.
+
+    ``z = D^-1 (f - A u)``; the new search direction is ``z / b`` when
+    ``a`` is None (the first step: ``b`` is theta) and ``a * d + b * z``
+    otherwise (``a = rho_k rho_{k-1}``, ``b = 2 rho_k / delta``) — the
+    exact spellings of the ``chebyshev`` closure in ``make_v_cycle``.
+    """
+    sd = _loc.stagger_dim(loc)
+    r = residual_op_ref(u, c, f, spacing, loc, imask)
+    if sd is None:
+        z = r[_INNER3] / dia[_INNER3]
+        dn = z / b if a is None else a * d[_INNER3] + b * z
+        u = u.at[_INNER3].add(dn)
+        d = jnp.zeros_like(d).at[_INNER3].set(dn)
+        return u, d
+    z = r / dia
+    dn = z / b if a is None else a * d + b * z
+    return u + dn, dn

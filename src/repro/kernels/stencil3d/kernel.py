@@ -28,9 +28,10 @@ from jax.experimental import pallas as pl
 def _heat_kernel(prev_ref, cur_ref, nxt_ref, ci_ref, coef_ref, out_ref, *, bx: int, nx: int):
     """One x-block of the stencil.
 
-    prev/cur/nxt: (bx, ny, nz) blocks i-1, i, i+1 of T (clamped at edges).
-    ci: (bx, ny, nz) block of 1/heat-capacity. coef: (5,) scalars in SMEM:
-    [dt*lam, 1/dx^2, 1/dy^2, 1/dz^2, <unused>].
+    prev/cur/nxt: (bx, ny, nz) blocks i-1, i, i+1 of T (wrap-mapped at the
+    edges, so a boundary block's ghost row is the wrap row — never its own
+    edge row).  ci: (bx, ny, nz) block of 1/heat-capacity. coef: (4,)
+    scalars in SMEM: [dt*lam, 1/dx^2, 1/dy^2, 1/dz^2].
     """
     i = pl.program_id(0)
     cur = cur_ref[...]
@@ -71,16 +72,20 @@ def heat_step_pallas(T, Ci, lam, dt, dx, dy, dz, *, bx: int = 8, interpret: bool
             jnp.asarray(1.0 / (dx * dx), T.dtype),
             jnp.asarray(1.0 / (dy * dy), T.dtype),
             jnp.asarray(1.0 / (dz * dz), T.dtype),
-            jnp.zeros((), T.dtype),
         ]
     )
 
+    # Wrap-mapped neighbors: a boundary block's ghost row is the row a
+    # jnp.roll wrap would read.  The global first/last x-rows pass
+    # through unchanged either way (the interior mask below), but the
+    # ghost CONTENT is now well-defined instead of silently aliasing the
+    # block's own edge row as the old clamped specs did.
     block = (bx, ny, nz)
-    prev_spec = pl.BlockSpec(block, lambda i: (jnp.maximum(i - 1, 0), 0, 0))
+    prev_spec = pl.BlockSpec(block, lambda i: ((i + nb - 1) % nb, 0, 0))
     cur_spec = pl.BlockSpec(block, lambda i: (i, 0, 0))
-    nxt_spec = pl.BlockSpec(block, lambda i: (jnp.minimum(i + 1, nb - 1), 0, 0))
+    nxt_spec = pl.BlockSpec(block, lambda i: ((i + 1) % nb, 0, 0))
 
-    coef_spec = pl.BlockSpec((5,), lambda i: (0,))
+    coef_spec = pl.BlockSpec((4,), lambda i: (0,))
 
     return pl.pallas_call(
         functools.partial(_heat_kernel, bx=bx, nx=nx),

@@ -63,12 +63,20 @@ from repro import telemetry as tele
 from repro.core import hide as _hide
 from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
+from repro.kernels import dispatch as _dispatch
+from repro.kernels.solver3d import kernel as _sk
+from repro.kernels.solver3d.ref import poisson_diag, poisson_stencil
 from repro.stencil import mac as _mac
 from repro.telemetry.flight import note_solve as _note_solve
 from repro.telemetry import health as _health
 from . import reductions as red
 from . import transfers
 from .cg import SolveInfo
+
+# Historical name: the canonical spelling now lives in
+# repro.kernels.solver3d.ref so the solver ref path and the fused-kernel
+# oracle are literally the same function (they cannot drift apart).
+_poisson_stencil = poisson_stencil
 
 SMOOTHERS = ("jacobi", "chebyshev")
 
@@ -101,28 +109,9 @@ def _shift(a, d: int, s: int):
 # flux-form variable-coefficient Poisson operator (local view)
 # ---------------------------------------------------------------------------
 
-def _poisson_stencil(u, c, spacing, shift=None):
-    """The flux-form stencil of halo-consistent ``u`` (no communication).
-
-    ``shift`` (optional cell-centered field) adds a Helmholtz diagonal:
-    ``shift * u - div(c grad u)``.
-    """
-    nd = u.ndim
-    u0 = u[_inner(nd)]
-    c0 = c[_inner(nd)]
-    acc = jnp.zeros_like(u0)
-    for d in range(nd):
-        up, um = _shift(u, d, +1), _shift(u, d, -1)
-        cp, cm = _shift(c, d, +1), _shift(c, d, -1)
-        cf_p = 0.5 * (c0 + cp)
-        cf_m = 0.5 * (c0 + cm)
-        acc = acc + (cf_p * (up - u0) - cf_m * (u0 - um)) / spacing[d] ** 2
-    out = -acc if shift is None else shift[_inner(nd)] * u0 - acc
-    return jnp.zeros_like(u).at[_inner(nd)].set(out)
-
-
 def poisson_apply(grid: ImplicitGlobalGrid, u, c, spacing,
-                  update_halo=True, hide=False, shift=None):
+                  update_halo=True, hide=False, shift=None,
+                  use_kernel: str = "auto", bx: int | None = None):
     """``A u = -div(c grad u)`` on the interior, zero on the ring.
 
     ``c`` is the cell-centered coefficient (halo-consistent); face
@@ -137,7 +126,30 @@ def poisson_apply(grid: ImplicitGlobalGrid, u, c, spacing,
     arithmetic, ~1-ulp shell differences at most): the exchange covers
     only the thin shell of output cells adjacent to the halos, which is
     recomputed after.
+
+    ``use_kernel`` selects the fused Pallas apply kernel
+    (:mod:`repro.kernels.solver3d`) behind the shared dispatch contract:
+    ``"auto"`` uses it when the capability probe passes (TPU, supported
+    dtype, divisible block) and falls back to this reference otherwise;
+    the kernel does not implement ``hide`` or Helmholtz ``shift``, so
+    those configurations always take the reference path (silently under
+    auto, ``ValueError`` under an explicit request).
     """
+    unsupported = None
+    if hide:
+        unsupported = "hide=True (overlapped apply)"
+    elif shift is not None:
+        unsupported = "Helmholtz shifts"
+    elif u.ndim != 3:
+        unsupported = f"a {u.ndim}-D field (kernels are 3-D)"
+    impl, nbx = _dispatch.resolve(use_kernel, shape=u.shape, dtype=u.dtype,
+                                  bx=bx, unsupported=unsupported,
+                                  where="multigrid.poisson_apply")
+    if impl != "ref":
+        if update_halo:
+            u = grid.update_halo(u)
+        return _sk.apply_pallas(u, c, h2=tuple(float(s) ** 2 for s in spacing),
+                                bx=nbx, interpret=impl == "interpret")
     if hide:
         if not update_halo:
             raise ValueError("hide=True already includes the halo update")
@@ -154,18 +166,6 @@ def poisson_apply(grid: ImplicitGlobalGrid, u, c, spacing,
     if update_halo:
         u = grid.update_halo(u)
     return _poisson_stencil(u, c, spacing, shift)
-
-
-def poisson_diag(c, spacing):
-    """Interior diagonal of the flux-form operator (for Jacobi)."""
-    nd = c.ndim
-    c0 = c[_inner(nd)]
-    dia = jnp.zeros_like(c0)
-    for d in range(nd):
-        cf_p = 0.5 * (c0 + _shift(c, d, +1))
-        cf_m = 0.5 * (c0 + _shift(c, d, -1))
-        dia = dia + (cf_p + cf_m) / spacing[d] ** 2
-    return dia
 
 
 # ---------------------------------------------------------------------------
@@ -275,6 +275,8 @@ def make_v_cycle(
     omega: float = 6.0 / 7.0,
     coarse_sweeps: int = 100,
     smoother: str = "jacobi",
+    use_kernel: str = "auto",
+    bx: int | None = None,
 ):
     """Build ``(v_cycle, residual)`` local-view closures over a hierarchy.
 
@@ -310,6 +312,19 @@ def make_v_cycle(
     for the pre/post sweeps (``nu_pre``/``nu_post`` = sweeps resp.
     polynomial degree); the coarsest level always uses Jacobi sweeps.
 
+    ``use_kernel`` routes the smoother sweeps and residuals through the
+    fused Pallas kernels of :mod:`repro.kernels.solver3d` (one pass over
+    each VMEM tile per sweep: stencil + residual + diagonal scale +
+    axpy).  The capability probe runs PER LEVEL — a coarse level whose
+    local extent no longer divides into blocks (or a Helmholtz-shifted
+    cycle, which the kernels don't implement) falls back to the
+    reference spelling under ``"auto"``, so deep hierarchies mix fused
+    fine levels with reference coarse levels.  An explicit ``bx``
+    applies to the finest level only; deeper levels auto-pick
+    (:func:`repro.kernels.dispatch.pick_bx`).  With every level on
+    ``"ref"`` the closures are the historical arithmetic, lowering to
+    the same HLO as before the kernels existed.
+
     Periodic dims need no special casing in the cycle itself: every
     level shares the topology (coarse grids inherit ``topo.periodic``),
     so each ``update_halo`` wraps the ring planes and the transfers read
@@ -328,6 +343,27 @@ def make_v_cycle(
             "Helmholtz shifts are only supported for the center cycle "
             f"(got loc={loc!r})")
     nd = grid.ndims
+
+    # Per-level kernel dispatch: one probe per level at build time (the
+    # choice is baked into the traced program).  Coarse levels whose
+    # local extent has no usable block divisor degrade to "ref"
+    # individually under "auto"; shifted cycles are ref everywhere.
+    unsupported = None
+    if shifts is not None:
+        unsupported = "Helmholtz shifts"
+    elif nd != 3:
+        unsupported = f"a {nd}-D hierarchy (kernels are 3-D)"
+    impls, bxs = [], []
+    for k, g in enumerate(grids):
+        impl_k, bx_k = _dispatch.resolve(
+            use_kernel, shape=g.local_shape, dtype=cs[0].dtype,
+            bx=bx if k == 0 else None, unsupported=unsupported,
+            where=f"multigrid.v_cycle[level {k}]")
+        impls.append(impl_k)
+        bxs.append(bx_k)
+    fused_any = any(i != "ref" for i in impls)
+    h2s = [tuple(float(s) ** 2 for s in hk) for hk in hs]
+
     # All-periodic + shift-free: every level's operator annihilates
     # constants.  The coarse rhs is kept mean-zero (wrap-aware masked
     # mean) so the coarse Jacobi sweeps cannot pump the nullspace mode —
@@ -346,11 +382,22 @@ def make_v_cycle(
         dias = [poisson_diag(ck, hk) for ck, hk in zip(cs, hs)]
         if shifts is not None:
             dias = [dk + sk[_inner(nd)] for dk, sk in zip(dias, shifts)]
+        if fused_any:
+            # Full-shape safe-divide diagonals for the fused kernels
+            # (ones on the ring, the interior diagonal inside) — only
+            # built when some level actually runs fused, so the all-ref
+            # cycle traces exactly the historical program.
+            fdias = [jnp.ones_like(ck).at[_inner(nd)].set(dk)
+                     for ck, dk in zip(cs, dias)]
 
         def residual(level, u, f):
             """f - A u on the interior, zero ring (u halo-consistent)."""
+            if impls[level] != "ref":
+                return _sk.residual_pallas(
+                    u, cs[level], f, h2=h2s[level], bx=bxs[level],
+                    interpret=impls[level] == "interpret")
             Au = poisson_apply(grids[level], u, cs[level], hs[level],
-                               update_halo=False,
+                               update_halo=False, use_kernel="ref",
                                shift=None if shifts is None else shifts[level])
             r = f[_inner(nd)] - Au[_inner(nd)]
             return jnp.zeros_like(u).at[_inner(nd)].set(r)
@@ -371,9 +418,16 @@ def make_v_cycle(
                   for g, ck in zip(grids, cs)]
         dias = [face_diag(ck, hk, sd) * mk + (1.0 - mk)   # safe to divide
                 for ck, hk, mk in zip(cs, hs, imasks)]
+        if fused_any:
+            fdias = dias  # already full-shape and safe to divide
 
         def residual(level, u, f):
             """f - A u on the unknowns of ``loc``, zero elsewhere."""
+            if impls[level] != "ref":
+                return _sk.residual_pallas(
+                    u, cs[level], f, h2=h2s[level], sd=sd,
+                    imask=imasks[level], bx=bxs[level],
+                    interpret=impls[level] == "interpret")
             Au = face_stencil(u, cs[level], hs[level], sd)
             return (f - Au) * imasks[level]
 
@@ -387,6 +441,18 @@ def make_v_cycle(
             return u + d
 
     def jacobi(level, u, f, iters):
+        if impls[level] != "ref":
+            itp = impls[level] == "interpret"
+            mk = None if sd is None else imasks[level]
+
+            def kbody(_, u):
+                return grid.update_halo(_sk.jacobi_pallas(
+                    u, cs[level], f, fdias[level], omega=omega,
+                    h2=h2s[level], sd=sd, imask=mk, bx=bxs[level],
+                    interpret=itp))
+
+            return jax.lax.fori_loop(0, iters, kbody, u)
+
         def body(_, u):
             r = residual(level, u, f)
             return grid.update_halo(add_scaled(level, u, r, omega))
@@ -397,6 +463,24 @@ def make_v_cycle(
         # 3-term recurrence on D^-1 A over [lam_max/4, lam_max]; the
         # rho_k are analytic constants — no reductions, fully unrolled.
         theta, delta, rhos = _cheb_rhos(degree)
+        if impls[level] != "ref":
+            # Fused recurrence: residual + diag scale + d-update + axpy
+            # in one kernel pass per step (same spelling as below).
+            itp = impls[level] == "interpret"
+            mk = None if sd is None else imasks[level]
+            u, d = _sk.cheb_pallas(u, cs[level], f, fdias[level],
+                                   jnp.zeros_like(u), a=None, b=theta,
+                                   h2=h2s[level], sd=sd, imask=mk,
+                                   bx=bxs[level], interpret=itp)
+            u = grid.update_halo(u)
+            for k in range(1, degree):
+                u, d = _sk.cheb_pallas(u, cs[level], f, fdias[level], d,
+                                       a=rhos[k] * rhos[k - 1],
+                                       b=2.0 * rhos[k] / delta,
+                                       h2=h2s[level], sd=sd, imask=mk,
+                                       bx=bxs[level], interpret=itp)
+                u = grid.update_halo(u)
+            return u
         z = precond_residual(level, u, f)
         d = z / theta
         u = grid.update_halo(add_corr(u, d))
@@ -576,6 +660,8 @@ def multigrid_solve(
     coarse_sweeps: int = 100,
     max_levels: int | None = None,
     smoother: str = "jacobi",
+    use_kernel: str = "auto",
+    bx: int | None = None,
 ):
     """Solve ``-div(c grad x) = b`` by V-cycles, at any staggering location.
 
@@ -628,6 +714,7 @@ def multigrid_solve(
         v_cycle, residual = make_v_cycle(
             grid, grids, hs, cs, loc=loc, nu_pre=nu_pre, nu_post=nu_post,
             omega=omega, coarse_sweeps=coarse_sweeps, smoother=smoother,
+            use_kernel=use_kernel, bx=bx,
         )
         mask = red.loc_solve_mask(grid, loc, b.dtype)
 
@@ -693,7 +780,7 @@ def multigrid_solve(
 
     key = ("solvers.mg", loc, tol, maxiter, nu_pre, nu_post, omega,
            coarse_sweeps, max_levels, smoother, spacing, b.shape, b.dtype,
-           cfg)
+           cfg, use_kernel, bx)
     if key not in grid._jit_cache:
         grid._jit_cache[key] = jax.jit(_build())
 

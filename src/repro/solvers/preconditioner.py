@@ -78,6 +78,11 @@ class CyclePreconditioner:
     its coarse solve internally; pair it with
     ``cg(..., project_nullspace="constant")`` so the Krylov iterates
     stay on the mean-zero complement too.
+
+    ``use_kernel``/``bx`` select the fused Pallas smoother/operator
+    kernels for every per-location cycle (shared ``"auto"`` contract of
+    :mod:`repro.kernels.dispatch`; ``"ref"`` traces the historical
+    pure-jnp cycle unchanged).
     """
 
     def __init__(
@@ -94,6 +99,8 @@ class CyclePreconditioner:
         smoother: str = "jacobi",
         helmholtz_shift: bool = False,
         per_location: bool = True,
+        use_kernel: str = "auto",
+        bx: int | None = None,
     ):
         if grid.halo != 1:
             raise ValueError("multigrid assumes halo width 1 (overlap=2)")
@@ -113,7 +120,8 @@ class CyclePreconditioner:
         self.helmholtz_shift = bool(helmholtz_shift)
         self.per_location = bool(per_location)
         self.kw = dict(nu_pre=nu_pre, nu_post=nu_post, omega=omega,
-                       coarse_sweeps=coarse_sweeps, smoother=smoother)
+                       coarse_sweeps=coarse_sweeps, smoother=smoother,
+                       use_kernel=use_kernel, bx=bx)
 
     def setup(self, c, *rest):
         """Build ``M`` from the local-view operands (once per solve)."""

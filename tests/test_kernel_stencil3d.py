@@ -51,3 +51,44 @@ def test_block_divisibility_error():
     T = jnp.ones((10, 8, 8))
     with pytest.raises(ValueError):
         heat_step(T, T, 1.0, 0.1, 1, 1, 1, use_kernel="interpret", bx=4)
+
+
+def test_auto_nondivisible_falls_back():
+    """Regression: use_kernel='auto' with nx % bx != 0 must fall back to
+    the reference (one-time warning on a TPU host), never raise — the
+    historical crash was the explicit-path ValueError escaping 'auto'."""
+    from repro.kernels import dispatch
+
+    T = jnp.asarray(np.random.RandomState(0).rand(10, 8, 8), jnp.float32)
+    got = heat_step(T, T, 1.0, 0.1, 1, 1, 1, use_kernel="auto", bx=4)
+    ref = heat_step(T, T, 1.0, 0.1, 1, 1, 1, use_kernel="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # the TPU-backend probe (where the old code crashed) degrades too
+    dispatch.reset_warnings()
+    with pytest.warns(RuntimeWarning, match="not divisible"):
+        impl, b = dispatch.resolve(
+            "auto", shape=(10, 8, 8), dtype=jnp.float32, bx=4,
+            backend="tpu", where="stencil3d.heat_step")
+    assert (impl, b) == ("ref", None)
+    dispatch.reset_warnings()
+
+
+@pytest.mark.parametrize("bx", [8, 4])  # nb = 1 and nb = 2
+def test_heat_boundary_blocks(bx):
+    """Boundary blocks must not read their own rows as ghosts (the old
+    clamped BlockSpecs did): global edge rows pass through bit-exactly,
+    and the rows that READ a ghost row — next to the global boundary and
+    on both sides of the block seam — match the reference."""
+    shape = (8, 6, 6)
+    rng = np.random.RandomState(7)
+    T = jnp.asarray(rng.rand(*shape), jnp.float32)
+    Ci = jnp.asarray(rng.rand(*shape), jnp.float32)
+    got = heat_step_pallas(T, Ci, 1.3, 0.01, 0.7, 0.9, 1.1, bx=bx,
+                           interpret=True)
+    ref = heat_step_ref(T, Ci, 1.3, 0.01, 0.7, 0.9, 1.1)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(T[0]))
+    np.testing.assert_array_equal(np.asarray(got[-1]), np.asarray(T[-1]))
+    for r in sorted({1, bx - 1, bx % shape[0], shape[0] - 2}):
+        np.testing.assert_allclose(
+            np.asarray(got[r]), np.asarray(ref[r]), rtol=1e-6, atol=1e-6,
+            err_msg=f"row {r} (bx={bx})")
