@@ -1,0 +1,43 @@
+"""Trace-time static analysis of compiled distributed solves.
+
+Four rule families over a solve's closed jaxpr — collective congruence,
+halo-staleness dataflow, Pallas BlockSpec verification, and reduction
+exactness — with typed findings, a baseline/suppression file, and a CLI
+(``python -m repro.analysis``) that sweeps the app matrix.  See
+``docs/analysis.md``.
+
+Import side effects are kept near zero: the heavy submodules load on
+first attribute access so instrumented production modules can import
+:mod:`repro.analysis.markers` without dragging the analyzer in.
+"""
+
+from __future__ import annotations
+
+_LAZY = {
+    "check": ("driver", "check"),
+    "capture_check": ("driver", "capture_check"),
+    "analyze": ("driver", "analyze"),
+    "sweep": ("driver", "sweep"),
+    "merged": ("driver", "merged"),
+    "Finding": ("findings", "Finding"),
+    "Report": ("findings", "Report"),
+    "Baseline": ("findings", "Baseline"),
+    "CaptureDone": ("capture", "CaptureDone"),
+    "capture_solves": ("capture", "capture_solves"),
+    "stencil_read": ("markers", "stencil_read"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(f".{mod_name}", __name__)
+    value = getattr(mod, attr)
+    globals()[name] = value
+    return value

@@ -1,0 +1,100 @@
+"""CLI: sweep the app matrix and gate on the committed baseline.
+
+    python -m repro.analysis [--ndev 8] [--targets poisson heat ...]
+                             [--report out.json]
+                             [--baseline results/analysis-baseline.json]
+                             [--write-baseline]
+
+Exit status: 0 when every finding is suppressed by the baseline (or the
+tree is clean), 1 when new findings appear, 2 on usage errors.  The
+device count is faked via ``--xla_force_host_platform_device_count`` —
+set BEFORE any JAX backend initialization, which is why all repro
+imports happen inside ``main``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="trace-time distributed-correctness analyzer")
+    ap.add_argument("--ndev", type=int, default=8,
+                    help="faked host device count (default 8 -> 2x2x2 mesh)")
+    ap.add_argument("--targets", nargs="*", default=None,
+                    help="substring filters on target names (default: all)")
+    ap.add_argument("--report", default=None,
+                    help="write the full findings report (JSON) here")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline/suppression file to gate against")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings as the new baseline "
+                         "(requires --baseline)")
+    args = ap.parse_args(argv)
+    if args.write_baseline and not args.baseline:
+        ap.error("--write-baseline requires --baseline")
+
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={args.ndev}")
+    import jax
+
+    jax.config.update("jax_platform_name", "cpu")
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.analysis.driver import merged, sweep
+    from repro.analysis.findings import Baseline, Report
+
+    reports = sweep(targets=args.targets)
+    total = merged(reports)
+
+    for name in sorted(reports):
+        rep = reports[name]
+        print(f"{name}: {rep.summary()}")
+        for f in rep:
+            print(f"  {f}")
+    print(f"TOTAL: {total.summary()} over {len(reports)} target(s)")
+
+    if args.report:
+        report_with_targets = total.as_dict()
+        report_with_targets["targets"] = {
+            name: reports[name].as_dict() for name in sorted(reports)}
+        import json
+
+        with open(args.report, "w") as fh:
+            json.dump(report_with_targets, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"report written to {args.report}")
+
+    if args.write_baseline:
+        Baseline.from_report(
+            total, justification="accepted at baseline creation"
+        ).save(args.baseline)
+        print(f"baseline written to {args.baseline} "
+              f"({len(total)} suppression(s))")
+        return 0
+
+    if args.baseline and os.path.exists(args.baseline):
+        base = Baseline.load(args.baseline)
+        for e in base.unjustified():
+            print(f"note: baseline entry {e['fingerprint']} "
+                  f"({e['rule']} @ {e['site']}) has no justification")
+        new = base.new_findings(total)
+    else:
+        new = total.findings
+
+    if new:
+        print(f"FAIL: {len(new)} new finding(s) not in baseline:")
+        for f in Report(new):
+            print(f"  {f}")
+        return 1
+    print("PASS: no new findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Solve capture: steal a solver's traced jaxpr without running it.
+
+The solvers build their compiled program through a local ``_build()``
+closure immediately before populating the grid's jit cache.  Each of
+them calls :func:`maybe_capture` at that point — a no-op in production
+(one falsy check) — and when a capture context is active the hook
+re-traces the closure under :func:`markers.tracing` (so the contract
+markers bind) with ``jax.make_jaxpr`` and raises :class:`CaptureDone`
+carrying the closed jaxpr.  No executable is compiled, no device math
+runs, and the jit cache is never touched with a marker-bearing trace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Iterator
+
+
+class CaptureDone(Exception):
+    """Raised by a solver's capture hook; carries the traced program."""
+
+    def __init__(self, name: str, closed, halo: int):
+        super().__init__(f"captured solver trace: {name}")
+        self.name = name
+        self.closed = closed
+        self.halo = halo
+
+
+_CAPTURE: list[object] = []
+
+
+def capturing() -> bool:
+    return bool(_CAPTURE)
+
+
+@contextlib.contextmanager
+def capture_solves() -> Iterator[None]:
+    """Arm the solver capture hooks for the duration of the block."""
+    token = object()
+    _CAPTURE.append(token)
+    try:
+        yield
+    finally:
+        _CAPTURE.remove(token)
+
+
+def maybe_capture(name: str, build: Callable, args: tuple, *,
+                  grid=None) -> None:
+    """Solver-side hook: trace ``build()`` over ``args`` and bail out.
+
+    Called by the solvers just before they would compile; returns
+    immediately unless a :func:`capture_solves` context is active.
+    """
+    if not _CAPTURE:
+        return
+    import jax
+
+    from . import markers
+
+    with markers.tracing():
+        closed = jax.make_jaxpr(build())(*args)
+    raise CaptureDone(name, closed, grid.halo if grid is not None else 1)
+
+
+def capture(fn: Callable, *args, **kwargs) -> CaptureDone:
+    """Run ``fn`` until its first solver capture hook fires; return the
+    :class:`CaptureDone` (name, closed jaxpr, halo)."""
+    with capture_solves():
+        try:
+            fn(*args, **kwargs)
+        except CaptureDone as done:
+            return done
+    raise RuntimeError(
+        "no solver capture hook fired — the callable never reached "
+        "solvers.cg / multigrid_solve / pseudo_transient")

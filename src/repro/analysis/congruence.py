@@ -1,0 +1,152 @@
+"""Rule family 1: collective congruence.
+
+Every rank traces the SAME program (SPMD), so the collective sequence is
+identical across ranks *except* where data-dependent control flow
+(``lax.cond``/``switch``) lets different ranks take different branches.
+A collective present in one branch but not the other — or present in
+both with different parameters — deadlocks the job the moment the
+predicate becomes rank-dependent.  Three checks:
+
+* **branch congruence** — the full (nested) collective signature of all
+  branches of every ``cond`` must be identical;
+* **predicate purity** — a collective inside a ``while_loop``'s
+  predicate jaxpr would let ranks disagree on the iteration count;
+* **ppermute tables** — every permutation table must be either a
+  complete bijection of the axis (periodic wrap shift) or a complete
+  one-direction open shift (the partial-but-total table
+  ``topology.shift_perm`` builds for non-periodic dims, where boundary
+  ranks legitimately have no partner).  Duplicated sources/destinations
+  or tables with holes are the hang/corruption class.
+"""
+
+from __future__ import annotations
+
+import math
+
+from .findings import Finding
+from .jaxpr_walk import COLLECTIVES, subjaxprs, walk
+
+RULE = "collective-congruence"
+
+
+def _norm_params(eqn) -> tuple:
+    """Hashable, order-stable collective parameters for signatures."""
+    p = eqn.params
+    prim = eqn.primitive.name
+    if prim == "ppermute":
+        return (p.get("axis_name"), tuple(map(tuple, p.get("perm", ()))))
+    keys = ("axes", "axis_name", "axis_index_groups", "split_axis",
+            "concat_axis")
+    out = []
+    for k in keys:
+        if k in p:
+            v = p[k]
+            if isinstance(v, (list, tuple)):
+                v = tuple(v)
+            out.append((k, v))
+    return tuple(out)
+
+
+def signature(jaxpr) -> tuple:
+    """Nested collective signature of a jaxpr (loops/branches keep their
+    structure so `2x inside a loop` != `2x sequentially`)."""
+    sig = []
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in COLLECTIVES:
+            sig.append((prim, _norm_params(eqn)))
+        for sub in subjaxprs(eqn):
+            inner = signature(sub.jaxpr)
+            if inner:
+                sig.append((f"{prim}:{sub.name}", inner))
+    return tuple(sig)
+
+
+def _axis_size(eqn, scope) -> int | None:
+    names = eqn.params.get("axis_name")
+    if names is None:
+        return None
+    if not isinstance(names, (tuple, list)):
+        names = (names,)
+    sizes = []
+    for n in names:
+        s = scope.axis_sizes.get(str(n))
+        if s is None:
+            return None
+        sizes.append(s)
+    return math.prod(sizes)
+
+
+def classify_perm(pairs, n: int) -> tuple[bool, str]:
+    """Classify a ppermute table over an axis of size ``n``.
+
+    Returns ``(ok, reason)``.  OK tables: a complete bijection of
+    ``range(n)`` (any permutation — wraps included), or a complete open
+    shift (all pairs ``(i, i+s)`` with the same nonzero ``s``, covering
+    every in-range source — the non-periodic neighbor exchange).
+    """
+    pairs = [(int(s), int(d)) for s, d in pairs]
+    if not pairs:
+        return (n <= 1), "empty table" if n > 1 else "empty (single rank)"
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    if len(set(srcs)) != len(srcs):
+        return False, "duplicate source ranks (data races on send)"
+    if len(set(dsts)) != len(dsts):
+        return False, "duplicate destination ranks (lost messages)"
+    oob = [p for p in pairs if not (0 <= p[0] < n and 0 <= p[1] < n)]
+    if oob:
+        return False, f"rank out of range for axis size {n}: {oob[0]}"
+    if len(pairs) == n and set(srcs) == set(range(n)) \
+            and set(dsts) == set(range(n)):
+        return True, "complete bijection"
+    shifts = {d - s for s, d in pairs}
+    if len(shifts) == 1:
+        s = shifts.pop()
+        expected = {(i, i + s) for i in range(n) if 0 <= i + s < n}
+        if set(pairs) == expected and s != 0:
+            return True, "complete open shift"
+    return False, (f"partial table covers {len(pairs)}/{n} ranks "
+                   "(unpaired sends hang a blocking transport)")
+
+
+def run(closed) -> list[Finding]:
+    findings: list[Finding] = []
+    for eqn, scope in walk(closed):
+        prim = eqn.primitive.name
+        site = scope.path or "toplevel"
+        if prim == "cond":
+            sigs = [signature(sub.jaxpr) for sub in subjaxprs(eqn)]
+            if len(set(sigs)) > 1:
+                lens = [len(s) for s in sigs]
+                if min(lens) == 0 < max(lens):
+                    msg = ("collective inside only one branch of a cond "
+                           f"(branch collective counts {lens}): ranks taking "
+                           "different branches deadlock")
+                else:
+                    msg = ("cond branches trace different collective "
+                           f"sequences ({lens} collectives): rank-dependent "
+                           "branching deadlocks")
+                findings.append(Finding(RULE, "error", f"{site}/cond", msg))
+        elif prim == "while":
+            cond_sig = signature(subjaxprs(eqn)[0].jaxpr)
+            if cond_sig:
+                # A globally-reduced (replicated) predicate is computed in
+                # the BODY; a collective in the predicate itself is
+                # suspicious but coherent, so keep every rank honest.
+                findings.append(Finding(
+                    RULE, "warning", f"{site}/while.cond",
+                    f"collective {cond_sig[0][0]} inside a while_loop "
+                    "predicate — reduce in the body and carry the scalar"))
+        elif prim == "ppermute":
+            n = _axis_size(eqn, scope)
+            perm = eqn.params.get("perm", ())
+            if n is None:
+                continue  # axis size unknown (not under shard_map)
+            ok, reason = classify_perm(perm, n)
+            if not ok:
+                findings.append(Finding(
+                    RULE, "error", f"{site}/ppermute",
+                    f"ppermute table {list(map(tuple, perm))} on axis of "
+                    f"size {n}: {reason}"))
+    return findings

@@ -1,0 +1,162 @@
+"""Analyzer entry points: one-shot checks and the app-matrix sweep.
+
+:func:`check` traces an arbitrary local-view callable (typically a
+``jax.shard_map`` closure) under the contract markers and runs all four
+rule families on the closed jaxpr; :func:`capture_check` does the same
+for a full app solve by stealing the solver's traced program through
+:mod:`repro.analysis.capture`.  Neither compiles nor executes device
+code — ``jax.make_jaxpr`` is the only JAX machinery involved, so a
+check is safe in CI on machines with no accelerator and adds zero
+runtime to the programs it certifies (pinned by the lowered-HLO test in
+``tests/test_analysis.py``).
+
+:func:`sweep` runs the analyzer across the four flagship apps
+(Poisson / Heat / TwoPhase / Stokes) over the periodic x overlap x
+``use_kernel`` matrix that CI gates on.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from . import blockspec, capture, congruence, markers, reductions_lint, \
+    staleness
+from .findings import Report
+
+
+def analyze(closed, halo: int = 1) -> Report:
+    """Run all four rule families over a closed jaxpr."""
+    rep = Report()
+    rep.extend(congruence.run(closed))
+    rep.extend(staleness.run(closed, halo=halo))
+    rep.extend(blockspec.run(closed))
+    rep.extend(reductions_lint.run(closed))
+    return rep
+
+
+def check(fn: Callable, *args, halo: int = 1) -> Report:
+    """Trace ``fn(*args)`` abstractly (markers active) and analyze it.
+
+    ``args`` may be concrete arrays or ``jax.ShapeDtypeStruct``s — only
+    shapes/dtypes are used.
+    """
+    import jax
+
+    with markers.tracing():
+        closed = jax.make_jaxpr(fn)(*args)
+    return analyze(closed, halo=halo)
+
+
+def capture_check(fn: Callable, *args, **kwargs) -> Report:
+    """Run ``fn`` until its solver capture hook fires; analyze the
+    captured program (using the owning grid's halo width)."""
+    done = capture.capture(fn, *args, **kwargs)
+    return analyze(done.closed, halo=done.halo)
+
+
+# ---------------------------------------------------------------------------
+# the app matrix
+# ---------------------------------------------------------------------------
+
+def _heat_report(app) -> Report:
+    """Analyze a Heat3D step via a FRESH (unjitted, uncached) shard_map
+    over the app's local step closure — the production ``_step`` wrapper
+    is jitted and must never be traced with markers active."""
+    import jax
+
+    g = app.grid
+
+    def local(T, Ci):
+        if app._hide_widths is not None:
+            return g.hide(app._step_fn, (T, Ci), width=app._hide_widths)
+        return g.update_halo(app._step_fn(T, Ci))
+
+    sm = jax.shard_map(local, mesh=g.mesh, in_specs=(g.spec, g.spec),
+                       out_specs=g.spec, check_vma=False)
+    f = jax.ShapeDtypeStruct(g.stacked_shape, g.dtype)
+    return check(sm, f, f, halo=g.halo)
+
+
+def sweep(targets=None) -> dict[str, Report]:
+    """Analyze the full app matrix; returns ``{target_name: Report}``.
+
+    ``targets``: optional iterable of substrings — only matching target
+    names run.  Requires enough devices for a (2, 2, 2) mesh (the CLI
+    arranges that via ``--xla_force_host_platform_device_count``).
+    """
+    from repro.apps.heat3d import Heat3D
+    from repro.apps.poisson import Poisson3D
+    from repro.apps.stokes import Stokes3D
+    from repro.apps.twophase import TwoPhase3D
+
+    def poisson(method, *, periodic=False, use_kernel="ref", overlap=False,
+                dtype=None):
+        import jax.numpy as jnp
+
+        def run():
+            kw = {}
+            if dtype is not None:
+                kw["dtype"] = dtype
+            app = Poisson3D(periodic=(periodic,) * 3,
+                            use_kernel=use_kernel, **kw)
+            app.solve(method=method, overlap=overlap)
+
+        return lambda: capture_check(run)
+
+    def heat(*, hide, use_kernel="ref"):
+        def run():
+            app = Heat3D(nx=16, ny=16, nz=16,
+                         hide=(8, 2, 2) if hide else None,
+                         use_kernel=use_kernel)
+            return _heat_report(app)
+
+        return run
+
+    def twophase(*, overlap):
+        def run():
+            app = TwoPhase3D(nx=12, ny=12, nz=12, overlap=overlap,
+                             method="mgcg")
+            S = app.init_fields()
+            app.pressure_solve(S)
+
+        return lambda: capture_check(run)
+
+    def stokes(*, precond):
+        def run():
+            app = Stokes3D()
+            app.velocity_solve(precond=precond, maxiter=5)
+
+        return lambda: capture_check(run)
+
+    matrix: dict[str, Callable[[], Report]] = {
+        "poisson/cg[dirichlet]": poisson("cg"),
+        "poisson/cg[dirichlet,overlap]": poisson("cg", overlap=True),
+        "poisson/cg[periodic]": poisson("cg", periodic=True),
+        "poisson/mgcg[dirichlet]": poisson("mgcg"),
+        "poisson/mgcg[periodic]": poisson("mgcg", periodic=True),
+        "poisson/mgcg[dirichlet,interpret]": poisson(
+            "mgcg", use_kernel="interpret"),
+        "poisson/pt[dirichlet]": poisson("pt"),
+        "heat/step[hide]": heat(hide=True),
+        "heat/step[nohide]": heat(hide=False),
+        "heat/step[hide,interpret]": heat(hide=True, use_kernel="interpret"),
+        "twophase/pressure[direct]": twophase(overlap=False),
+        "twophase/pressure[overlap]": twophase(overlap=True),
+        "stokes/velocity[stress]": stokes(precond="stress"),
+        "stokes/velocity[noprecond]": stokes(precond=None),
+        "kernels/library": lambda: Report(blockspec.check_kernel_library()),
+    }
+
+    out: dict[str, Report] = {}
+    for name, thunk in matrix.items():
+        if targets and not any(t in name for t in targets):
+            continue
+        out[name] = thunk()
+    return out
+
+
+def merged(reports: dict[str, Report]) -> Report:
+    total = Report()
+    for rep in reports.values():
+        total.merge(rep)
+    return total

@@ -20,6 +20,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import markers as _an
 from repro.telemetry.counters import record_halo as _record_halo
 
 from .locations import _STAGGER_DIM as _LOC_STAGGER_DIM
@@ -101,6 +102,11 @@ def update_halo(
         off = A.ndim - topo.ndims
         if off < 0:
             raise ValueError(f"array rank {A.ndim} < topology rank {topo.ndims}")
+        # Contract markers for the static analyzer: identity primitives
+        # that bind only under an analysis trace (repro.analysis.markers)
+        # — the production program never contains them.
+        A = _an.exchange_in(A, width=width, site="core.halo.update_halo")
+        exchanged = []
         for d in dims:
             if topo.dims[d] == 1 and not topo.periodic[d]:
                 continue  # nothing to exchange
@@ -110,5 +116,8 @@ def update_halo(
             _record_halo(A.shape, d + off, width,
                          jnp.dtype(A.dtype).itemsize)
             A = _update_one_dim(topo, A, d, d + off, width)
+            exchanged.append(d)
+        A = _an.exchange_out(A, width=width, site="core.halo.update_halo",
+                             dims=exchanged)
         out.append(A)
     return out[0] if len(out) == 1 else tuple(out)

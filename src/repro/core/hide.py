@@ -35,6 +35,8 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import markers as _an
+
 from .halo import _slc, update_halo
 from .topology import CartesianTopology
 
@@ -105,6 +107,16 @@ def hide_communication(
     for k in range(len(outs)):
         outs[k] = outs[k].at[sl_global].set(int_out[k][sl_local])
 
+    # Analyzer contract: semantically this IS ``update_halo(step(...))``
+    # (bitwise-pinned in tests) — the exchanged planes mirror the
+    # neighbor's boundary shell, written BEFORE the exchange, so the
+    # output's ghosts are fresh even though the interior write lands
+    # after it (which the plain min-rule can't see).
+    outs = [_an.exchange_out(A, width=h, dims=tuple(range(nd)),
+                             site="core.hide.hide_communication.contract",
+                             contract=True)
+            for A in outs]
+
     return outs[0] if len(outs) == 1 else tuple(outs)
 
 
@@ -151,7 +163,14 @@ def hide_apply(
                 f"local extent {u.shape[d]} too small for halo {h} overlap")
 
     u2 = update_halo(topo, u, width=h)
-    out = op_fn(u, *extra)  # stale halos: wrong only on the inner shell
+    # Analyzer contract: hide_apply's declared semantics are
+    # ``op_fn(update_halo(u))`` — the shell recompute below discharges
+    # the staleness of the bulk pass, so the stale-bulk operand is
+    # marked as exchanged (contract=True keeps the redundancy rule from
+    # pairing it with a later real exchange).
+    ub = _an.exchange_out(u, width=h, site="core.hide.hide_apply.contract",
+                          contract=True)
+    out = op_fn(ub, *extra)  # stale halos: wrong only on the inner shell
     for d in range(nd):
         if topo.dims[d] == 1 and not topo.periodic[d]:
             # No exchange along d: u2 == u there, and every cell needing

@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.analysis import markers as _an
+
 _IN3 = (slice(None), slice(1, -1), slice(1, -1))
 
 
@@ -275,6 +277,8 @@ def _check_block(nx: int, bx: int) -> int:
 
 def apply_pallas(u, c, *, h2, sd=None, bx: int, interpret: bool = False):
     """Fused ``A u`` (center: zero-ring interior stencil; face: raw)."""
+    u = _an.consume(u, radius=1,
+                    site="kernels.solver3d.kernel.apply_pallas")
     nx, ny, nz = u.shape
     nb = _check_block(nx, bx)
     block, prev, cur, nxt = _specs(bx, ny, nz, nb)
@@ -294,6 +298,8 @@ def apply_pallas(u, c, *, h2, sd=None, bx: int, interpret: bool = False):
 def residual_pallas(u, c, f, *, h2, sd=None, imask=None, bx: int,
                     interpret: bool = False):
     """Fused ``f - A u`` on the location's unknowns, zero elsewhere."""
+    u = _an.consume(u, radius=1,
+                    site="kernels.solver3d.kernel.residual_pallas")
     nx, ny, nz = u.shape
     nb = _check_block(nx, bx)
     block, prev, cur, nxt = _specs(bx, ny, nz, nb)
@@ -316,6 +322,8 @@ def jacobi_pallas(u, c, f, dia, *, omega, h2, sd=None, imask=None, bx: int,
                   interpret: bool = False):
     """Fused damped-Jacobi sweep: stencil + residual + diag scale + axpy
     in one pass over each tile."""
+    u = _an.consume(u, radius=1,
+                    site="kernels.solver3d.kernel.jacobi_pallas")
     nx, ny, nz = u.shape
     nb = _check_block(nx, bx)
     block, prev, cur, nxt = _specs(bx, ny, nz, nb)
@@ -340,6 +348,8 @@ def cheb_pallas(u, c, f, dia, d, *, a, b, h2, sd=None, imask=None, bx: int,
                 interpret: bool = False):
     """Fused Chebyshev recurrence step -> ``(u, d)`` (see
     ``ref.cheb_sweep_ref`` for the ``a``/``b`` convention)."""
+    u = _an.consume(u, radius=1,
+                    site="kernels.solver3d.kernel.cheb_pallas")
     nx, ny, nz = u.shape
     nb = _check_block(nx, bx)
     block, prev, cur, nxt = _specs(bx, ny, nz, nb)

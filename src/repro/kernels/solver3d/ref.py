@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.analysis import markers as _an
 from repro.core import locations as _loc
 from repro.stencil import mac as _mac
 
@@ -58,6 +59,9 @@ def poisson_stencil(u, c, spacing, shift=None):
     ``shift * u - div(c grad u)``.
     """
     nd = u.ndim
+    # Ghost-demand contract for the static analyzer (identity marker;
+    # binds only under an analysis trace).
+    u = _an.consume(u, radius=1, site="kernels.solver3d.ref.poisson_stencil")
     u0 = u[_inner(nd)]
     c0 = c[_inner(nd)]
     acc = jnp.zeros_like(u0)

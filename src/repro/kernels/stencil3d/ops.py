@@ -13,6 +13,7 @@ convention, so they compose with ``update_halo`` and
 
 from __future__ import annotations
 
+from repro.analysis import markers as _an
 from repro.kernels import dispatch as _dispatch
 
 from .kernel import heat_step_pallas
@@ -30,6 +31,10 @@ def heat_step(T, Ci, lam, dt, dx, dy, dz, *, use_kernel: str = "auto",
     impl, nbx = _dispatch.resolve(use_kernel, shape=T.shape, dtype=T.dtype,
                                   bx=bx, unsupported=unsupported,
                                   where="stencil3d.heat_step")
+    # Ghost-demand contract for the static analyzer (identity; binds
+    # only under an analysis trace).  Marked HERE — outside the jitted
+    # kernel wrapper — so the pjit cache never sees a marker trace.
+    T = _an.consume(T, radius=1, site="kernels.stencil3d.heat_step")
     if impl == "ref":
         return heat_step_ref(T, Ci, lam, dt, dx, dy, dz)
     return heat_step_pallas(T, Ci, lam, dt, dx, dy, dz, bx=nbx,

@@ -35,6 +35,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import telemetry as tele
+from repro.analysis import capture as _ana
 from repro.core.grid import ImplicitGlobalGrid
 from repro.core.locations import is_field_node as _is_field_node
 from repro.telemetry.flight import note_solve as _note_solve
@@ -285,6 +286,11 @@ def cg(
             out_specs=(grid.spec,) + tuple(P() for _ in range(n_out - 1)),
             check_vma=False,
         )
+
+    # Static-analysis capture hook: a no-op in production; under
+    # repro.analysis.capture it re-traces _build() abstractly (markers
+    # active) and raises before anything below compiles or runs.
+    _ana.maybe_capture("cg", _build, (b, x0) + tuple(args), grid=grid)
 
     # One compiled program per (operator, tolerances, structure/shapes):
     # reuse the grid's executable cache so repeat solves skip retracing

@@ -60,6 +60,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import telemetry as tele
+from repro.analysis import capture as _ana
 from repro.core import hide as _hide
 from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
@@ -777,6 +778,9 @@ def multigrid_solve(
             out_specs=(grid.spec,) + tuple(P() for _ in range(n_out - 1)),
             check_vma=False,
         )
+
+    # Static-analysis capture hook (no-op in production; see solvers.cg).
+    _ana.maybe_capture("mg", _build, (b, c, x0), grid=grid)
 
     key = ("solvers.mg", loc, tol, maxiter, nu_pre, nu_post, omega,
            coarse_sweeps, max_levels, smoother, spacing, b.shape, b.dtype,

@@ -35,6 +35,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import telemetry as tele
+from repro.analysis import capture as _ana
 from repro.core.grid import ImplicitGlobalGrid
 from repro.telemetry.flight import note_solve as _note_solve
 from repro.telemetry import health as _health
@@ -146,6 +147,9 @@ def pseudo_transient(
             out_specs=(grid.spec,) + tuple(P() for _ in range(n_out - 1)),
             check_vma=False,
         )
+
+    # Static-analysis capture hook (no-op in production; see solvers.cg).
+    _ana.maybe_capture("pt", _build, (b, x0) + tuple(args), grid=grid)
 
     key = ("solvers.pt", apply_A, alpha, beta, tol, maxiter,
            b.shape, b.dtype, tuple((a.shape, a.dtype) for a in args), cfg)

@@ -31,6 +31,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import markers as _an
 from repro.core import locations as _loc
 from repro.core.grid import ImplicitGlobalGrid
 from repro.core.topology import CartesianTopology
@@ -53,6 +54,7 @@ def psum(topo: CartesianTopology, x):
     if not axes:
         return x
     _record_all_reduce(getattr(x, "size", 1))
+    x = _an.blessed_reduce(x, op="psum", site="solvers.reductions.psum")
     return jax.lax.psum(x, axes)
 
 
@@ -61,6 +63,7 @@ def pmax(topo: CartesianTopology, x):
     if not axes:
         return x
     _record_all_reduce(getattr(x, "size", 1))
+    x = _an.blessed_reduce(x, op="pmax", site="solvers.reductions.pmax")
     return jax.lax.pmax(x, axes)
 
 
@@ -69,6 +72,7 @@ def pmin(topo: CartesianTopology, x):
     if not axes:
         return x
     _record_all_reduce(getattr(x, "size", 1))
+    x = _an.blessed_reduce(x, op="pmin", site="solvers.reductions.pmin")
     return jax.lax.pmin(x, axes)
 
 
@@ -112,7 +116,8 @@ def owned_mask(grid: ImplicitGlobalGrid, dtype=None):
                 | ((grid.topo.coord(d) == grid.dims[d] - 1) & (idx >= n - h))
             )
         m = m * own.astype(dtype)
-    return m
+    return _an.mask(m, mask_kind="owned",
+                    site="solvers.reductions.owned_mask")
 
 
 def interior_mask(grid: ImplicitGlobalGrid, width: int | None = None, dtype=None):
@@ -134,7 +139,8 @@ def interior_mask(grid: ImplicitGlobalGrid, width: int | None = None, dtype=None
             continue
         inner = (gidx[d] >= w) & (gidx[d] < grid.n_g(d) - w)
         m = m * inner.astype(dtype)
-    return m
+    return _an.mask(m, mask_kind="interior",
+                    site="solvers.reductions.interior_mask")
 
 
 def solve_mask(grid: ImplicitGlobalGrid, dtype=None):

@@ -29,6 +29,16 @@ most one cell in each direction, within the halo).
 
 from __future__ import annotations
 
+from repro.analysis import markers as _an
+
+
+def _consume(xp, a, site: str):
+    """Ghost-demand marker for the analyzer — jnp consumers only (the
+    identity primitive would convert the NumPy oracle's arrays)."""
+    if getattr(xp, "__name__", "") == "jax.numpy":
+        return _an.consume(a, radius=1, site=site)
+    return a
+
 
 def roll(xp, a, d: int, s: int):
     """Value at index ``i`` becomes ``a[i + s]`` along dim ``d``."""
@@ -58,6 +68,7 @@ def stripped_component(xp, u, eta, spacing, d: int):
     zero everything outside the component's unknown faces.
     """
     nd = u.ndim
+    u = _consume(xp, u, "stencil.mac.stripped_component")
     h2 = [float(s) ** 2 for s in spacing]
     acc = xp.zeros_like(u)
     for dd in range(nd):
@@ -118,6 +129,7 @@ def full_stress_apply(xp, V, eta, spacing):
     callers zero everything outside each component's unknown faces.
     """
     nd = len(V)
+    V = [_consume(xp, v, "stencil.mac.full_stress_apply") for v in V]
     h = [float(s) for s in spacing]
     out = []
     for d in range(nd):

@@ -151,10 +151,14 @@ def tag(name: str):
         return
     col = _STACK[-1]
     col.tags.append(name)
+    # Pop by position, not value: ``remove(name)`` strips the FIRST
+    # occurrence, which under nested same-name tags would pop the outer
+    # level and retag everything after the inner exit.
+    depth = len(col.tags) - 1
     try:
         yield
     finally:
-        col.tags.remove(name)
+        del col.tags[depth]
 
 
 def halo_slab_bytes(shape, dim: int, width: int, itemsize: int) -> int:

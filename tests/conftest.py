@@ -1,0 +1,28 @@
+"""Shared fixtures: the static-analyzer gate for solver suites.
+
+``analyze_clean`` traces a local-view callable (or, via ``capture=``, a
+full app/solver invocation) through :mod:`repro.analysis` and fails the
+test on any error-severity finding.  Pure trace-time — no device code
+runs — so it is safe in the single-device pytest process.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+
+@pytest.fixture
+def analyze_clean():
+    from repro import analysis
+
+    def _check(fn, *args, halo: int = 1, capture: bool = False):
+        if capture:
+            rep = analysis.capture_check(fn, *args)
+        else:
+            rep = analysis.check(fn, *args, halo=halo)
+        errs = rep.errors()
+        assert not errs, "static analysis found errors:\n" + "\n".join(
+            f"  {f}" for f in errs)
+        return rep
+
+    return _check

@@ -1,0 +1,276 @@
+"""The trace-time distributed-correctness analyzer (repro/analysis/).
+
+Unit tests for the finding/baseline plumbing and the ppermute
+classifier, in-process lattice checks on marker-level programs, the
+zero-cost pin (identical lowered HLO with and without an analysis pass),
+and a subprocess sweep of real app targets on 8 fake devices.  The
+mutation corpus lives in ``tests/test_analysis_mutants.py``; the full
+15-target sweep is the CI ``analysis-gate`` job.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro import analysis
+from repro.analysis import congruence, markers
+from repro.analysis.findings import Baseline, Finding, Report
+
+from _mp import run
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# findings / report / baseline plumbing
+# ---------------------------------------------------------------------------
+
+def test_finding_fingerprint_stable_and_line_free():
+    a = Finding("halo-staleness", "error", "solvers.cg", "stale read")
+    b = Finding("halo-staleness", "error", "solvers.cg", "stale read")
+    c = Finding("halo-staleness", "error", "solvers.cg", "other")
+    assert a.fingerprint == b.fingerprint
+    assert a.fingerprint != c.fingerprint
+    assert len(a.fingerprint) == 16
+
+
+def test_report_dedup_and_views():
+    f1 = Finding("r", "error", "s", "m")
+    f2 = Finding("r", "error", "s", "m")  # same fingerprint
+    f3 = Finding("r2", "perf", "s", "m")
+    rep = Report([f1, f2, f3])
+    assert len(rep) == 2
+    assert [f.rule for f in rep.errors()] == ["r"]
+    assert [f.rule for f in rep.by_rule("r2")] == ["r2"]
+    assert "1 error" in rep.summary() and "1 perf" in rep.summary()
+
+
+def test_baseline_roundtrip_and_gate(tmp_path):
+    f1 = Finding("r", "error", "s", "m1")
+    f2 = Finding("r", "error", "s", "m2")
+    base = Baseline.from_report(Report([f1]), justification="known issue")
+    p = tmp_path / "base.json"
+    base.save(p)
+    loaded = Baseline.load(p)
+    assert loaded.suppresses(f1)
+    assert not loaded.suppresses(f2)
+    new = loaded.new_findings(Report([f1, f2]))
+    assert [f.message for f in new] == ["m2"]
+    assert loaded.unjustified() == []
+
+
+# ---------------------------------------------------------------------------
+# ppermute table classifier
+# ---------------------------------------------------------------------------
+
+def test_classify_perm_tables():
+    ok = lambda pairs, n: congruence.classify_perm(pairs, n)[0]
+    # complete ring (periodic wrap) and open shift (non-periodic)
+    assert ok([(i, (i + 1) % 4) for i in range(4)], 4)
+    assert ok([(0, 1), (1, 2), (2, 3)], 4)
+    assert ok([(1, 0), (2, 1), (3, 2)], 4)  # reverse direction
+    assert ok([], 1)  # single rank: nothing to send
+    # broken tables
+    assert not ok([], 4)                       # empty on a real axis
+    assert not ok([(0, 1), (1, 2)], 4)         # partial open shift
+    assert not ok([(0, 1), (0, 2)], 4)         # duplicate source
+    assert not ok([(0, 1), (2, 1)], 4)         # duplicate destination
+    assert not ok([(0, 5)], 4)                 # out of range
+    assert ok([(0, 1), (1, 0), (2, 3), (3, 2)], 4)  # pairwise swap bijection
+    assert ok([(0, 1), (1, 0), (2, 3), (3, 2)], 4)
+
+
+# ---------------------------------------------------------------------------
+# staleness lattice on marker-level programs (single device, in-process)
+# ---------------------------------------------------------------------------
+
+def _check(fn, *args, halo=1):
+    return analysis.check(fn, *args, halo=halo)
+
+
+def test_staleness_clean_exchange_then_consume():
+    def f(u):
+        u = markers.exchange_out(u, width=1, site="t", dims=(0,))
+        return markers.consume(u, radius=1, site="t.op")
+
+    assert not _check(f, jnp.zeros((6, 6, 6)))
+
+
+def test_staleness_consume_deeper_than_entry():
+    def f(u):
+        return markers.consume(u, radius=2, site="t.op")
+
+    rep = _check(f, jnp.zeros((6, 6, 6)), halo=1)
+    assert rep.by_rule("halo-staleness") and rep.errors()
+
+
+def test_staleness_decay_in_loop():
+    # Consuming inside a while loop with no exchange: fresh entry halos
+    # only survive the first iteration, so the fixpoint flags it.
+    def f(u):
+        def body(c):
+            u, k = c
+            u = markers.consume(u, radius=1, site="t.loop.op")
+            return u, k + 1
+
+        def cond(c):
+            return c[1] < 10
+
+        return jax.lax.while_loop(cond, body, (u, 0))
+
+    rep = _check(f, jnp.zeros((6, 6, 6)))
+    assert rep.by_rule("halo-staleness") and rep.errors()
+
+    # ... and the exchange inside the loop fixes it.
+    def g(u):
+        def body(c):
+            u, k = c
+            u = markers.exchange_out(u, width=1, site="t.loop", dims=(0,))
+            u = markers.consume(u, radius=1, site="t.loop.op")
+            return u, k + 1
+
+        def cond(c):
+            return c[1] < 10
+
+        return jax.lax.while_loop(cond, body, (u, 0))
+
+    assert not _check(g, jnp.zeros((6, 6, 6)))
+
+
+def test_staleness_interior_write_propagates_staleness():
+    # An interior write with a stale payload makes the RESULT stale too:
+    # the neighbor's freshly written interior is exactly what my ghost
+    # ring mirrors, so consuming without a new exchange is an error ...
+    def f(u):
+        u = markers.exchange_out(u, width=1, site="t", dims=(0, 1, 2))
+        stale = markers.consume(u, radius=1, site="t.step") * 2.0
+        u = jax.lax.dynamic_update_slice(u, stale[1:-1], (1, 0, 0))
+        return markers.consume(u, radius=1, site="t.op2")
+
+    rep = _check(f, jnp.zeros((6, 6, 6)))
+    assert rep.by_rule("halo-staleness") and rep.errors()
+
+    # ... and re-exchanging after the write clears it.
+    def g(u):
+        u = markers.exchange_out(u, width=1, site="t", dims=(0, 1, 2))
+        stale = markers.consume(u, radius=1, site="t.step") * 2.0
+        u = jax.lax.dynamic_update_slice(u, stale[1:-1], (1, 0, 0))
+        u = markers.exchange_out(u, width=1, site="t.h2", dims=(0, 1, 2))
+        return markers.consume(u, radius=1, site="t.op2")
+
+    assert not _check(g, jnp.zeros((6, 6, 6)))
+
+
+def test_hide_communication_contract_marker():
+    # hide_communication's output carries its exchange contract: a step
+    # built on it can be consumed again without a fresh update_halo.
+    from repro.core import init_global_grid
+
+    g = init_global_grid(8, 8, 8, dims=(1, 1, 1),
+                         periodic=(True, True, True))
+
+    def step(u):
+        return markers.consume(u, radius=1, site="t.step") * 0.5
+
+    def f(u):
+        from repro.core.hide import hide_communication
+
+        out = hide_communication(g.topo, step, (u,), width=1)
+        return markers.consume(out, radius=1, site="t.next")
+
+    sm = jax.shard_map(f, mesh=g.mesh, in_specs=(g.spec,),
+                       out_specs=g.spec, check_vma=False)
+    assert not _check(sm, jnp.zeros(g.stacked_shape, jnp.float32))
+
+
+def test_redundant_exchange_is_perf_finding():
+    def f(u):
+        u = markers.exchange_in(u, width=1, site="t.h1")
+        u = markers.exchange_out(u, width=1, site="t.h1", dims=(0,))
+        u = markers.exchange_in(u, width=1, site="t.h2")
+        u = markers.exchange_out(u, width=1, site="t.h2", dims=(0,))
+        return markers.consume(u, radius=1, site="t.op")
+
+    rep = _check(f, jnp.zeros((6, 6, 6)))
+    red = rep.by_rule("redundant-exchange")
+    assert red and all(f.severity == "perf" for f in red)
+    assert not rep.errors()
+
+
+def test_public_stencil_read_marker():
+    # User-facing hook: declare a deeper read than the remaining ghost
+    # validity (a consume already spent one of the two fresh planes).
+    def f(u):
+        u = markers.consume(u, radius=1, site="t.op1")
+        return analysis.stencil_read(u, radius=2, site="user.kernel")
+
+    rep = _check(f, jnp.zeros((6, 6, 6)), halo=2)
+    assert rep.by_rule("halo-staleness")
+
+
+# ---------------------------------------------------------------------------
+# the analyze_clean fixture on a real (single-device) solver capture
+# ---------------------------------------------------------------------------
+
+def test_fixture_gates_a_solver_suite(analyze_clean):
+    from repro.apps.poisson import Poisson3D
+
+    def run_solve():
+        app = Poisson3D(nx=8, ny=8, nz=8, dims=(1, 1, 1), dtype=jnp.float32)
+        app.solve(method="cg")
+
+    rep = analyze_clean(run_solve, capture=True)
+    assert not rep.errors()
+
+
+def test_capture_executes_no_solver_iterations():
+    # The capture hook raises before the solve's jit cache is populated.
+    from repro.analysis.capture import CaptureDone, capture
+    from repro.apps.poisson import Poisson3D
+
+    app = Poisson3D(nx=8, ny=8, nz=8, dims=(1, 1, 1), dtype=jnp.float32)
+    done = capture(lambda: app.solve(method="cg"))
+    assert isinstance(done, CaptureDone)
+    assert done.name == "cg" and done.halo == app.grid.halo
+    assert not any(k[0] == "solvers.cg" for k in app.grid._jit_cache)
+
+
+# ---------------------------------------------------------------------------
+# zero cost: analysis never changes what the apps compile
+# ---------------------------------------------------------------------------
+
+def test_lowered_hlo_identical_after_analysis():
+    run("""
+jax.config.update("jax_enable_x64", True)
+from repro.apps.heat3d import Heat3D
+from repro.analysis import driver
+
+app = Heat3D(nx=16, ny=16, nz=16, hide=(8, 2, 2))
+T, Ci = app.init_fields()
+before = jax.jit(app._step).lower(T, Ci).as_text()
+
+rep = driver._heat_report(app)   # full analysis pass over the same step
+assert not rep.errors(), [str(f) for f in rep]
+
+after = jax.jit(app._step).lower(T, Ci).as_text()
+assert before == after, "analysis changed the lowered HLO of the app step"
+assert "analysis_marker" not in before
+print("OK")
+""", ndev=8)
+
+
+# ---------------------------------------------------------------------------
+# real app targets on 8 fake devices (subset; full matrix = CI gate)
+# ---------------------------------------------------------------------------
+
+def test_sweep_subset_clean():
+    run("""
+jax.config.update("jax_enable_x64", True)
+from repro.analysis.driver import merged, sweep
+
+reports = sweep(targets=["poisson/cg[dirichlet]", "heat/step[hide]",
+                         "kernels/library"])
+assert len(reports) == 3, sorted(reports)
+total = merged(reports)
+assert not total.findings, [str(f) for f in total]
+print("OK")
+""", ndev=8)

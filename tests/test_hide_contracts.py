@@ -1,0 +1,108 @@
+"""Contracts of the comm-hiding transforms (repro/core/hide.py).
+
+Pins the two subtle branches the static analyzer leans on:
+
+* ``hide_apply``'s skip branch — along a dim with ``dims[d] == 1`` and
+  no wrap there is no exchange, so the shell recompute is skipped; the
+  result must still be bitwise identical to the unskipped spelling
+  (every cell that needs fresh halos of OTHER dims lies inside those
+  dims' recomputed shells).
+* ``hide_communication``'s width clamp — a requested shell thinner than
+  the halo is silently widened to the halo so the send slabs stay
+  inside freshly computed cells; results stay bitwise equal to the
+  plain ``update_halo(step(...))`` spelling.
+
+Integer-valued f64 fields keep every sum exact, so "bitwise" is robust
+to vectorization differences between slab shapes.
+"""
+
+from _mp import run
+
+
+def test_hide_apply_skip_branch_bitwise():
+    run("""
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro.core.halo import _slc, update_halo
+from repro.core.hide import hide_apply
+from repro.kernels.solver3d import ref
+
+# dims=(2, 1, 1) non-periodic: dims 1 and 2 take the skip branch.
+g = init_global_grid(12, 10, 10, dims=(2, 1, 1))
+rng = np.random.RandomState(7)
+c = jnp.asarray(np.round(rng.rand(*g.local_shape) * 8))
+spacing = (1.0, 1.0, 1.0)
+
+def op(u, c):
+    return ref.poisson_stencil(u, c, spacing)
+
+def hide_apply_noskip(topo, op_fn, u, *extra, halo=1):
+    # Literal copy of hide_apply's recompute loop WITHOUT the
+    # dims[d]==1-and-open skip: the reference the skip must match.
+    h = halo
+    nd = u.ndim
+    u2 = update_halo(topo, u, width=h)
+    out = op_fn(u, *extra)
+    for d in range(nd):
+        n = u.shape[d]
+        lo_in = _slc(nd, d, 0, 3 * h)
+        hi_in = _slc(nd, d, n - 3 * h, n)
+        lo = op_fn(u2[lo_in], *(e[lo_in] for e in extra))
+        hi = op_fn(u2[hi_in], *(e[hi_in] for e in extra))
+        sl = _slc(nd, d, h, 2 * h)
+        out = out.at[_slc(nd, d, h, 2 * h)].set(lo[sl])
+        out = out.at[_slc(nd, d, n - 2 * h, n - h)].set(hi[sl])
+    return out
+
+@g.parallel
+def skipped(u):
+    return hide_apply(g.topo, op, u, c)
+
+@g.parallel
+def unskipped(u):
+    return hide_apply_noskip(g.topo, op, u, c)
+
+@g.parallel
+def plain(u):
+    return op(update_halo(g.topo, u, width=1), c)
+
+u = g.scatter(np.round(rng.rand(*g.global_shape) * 64))
+a = np.asarray(skipped(u))
+b = np.asarray(unskipped(u))
+p = np.asarray(plain(u))
+np.testing.assert_array_equal(a, b)   # skip branch == unskipped copy
+np.testing.assert_array_equal(a, p)   # ... == the declared semantics
+print("OK")
+""", ndev=2)
+
+
+def test_hide_communication_width_clamped_to_halo():
+    run("""
+jax.config.update("jax_enable_x64", True)
+from repro.core import init_global_grid
+from repro.stencil import fd3d as fd
+
+g = init_global_grid(12, 10, 10, dims=(2, 1, 1))
+rng = np.random.RandomState(11)
+T = g.scatter(np.round(rng.rand(*g.global_shape) * 32))
+Ci = g.scatter(np.round(rng.rand(*g.global_shape) * 8))
+
+def step(T, Ci):
+    Tn = fd.inn(T) + fd.inn(Ci) * (fd.d2_xi(T) + fd.d2_yi(T) + fd.d2_zi(T))
+    return T.at[1:-1, 1:-1, 1:-1].set(Tn)
+
+@g.parallel
+def plain(T, Ci):
+    return g.update_halo(step(T, Ci))
+
+# width=0 requests a shell thinner than the halo; the clamp widens it
+# to halo width so the exchange slabs hold freshly computed values.
+@g.parallel
+def clamped(T, Ci):
+    return g.hide(step, (T, Ci), width=(0, 0, 0))
+
+a = np.asarray(plain(T, Ci))
+b = np.asarray(clamped(T, Ci))
+np.testing.assert_array_equal(a, b)
+print("OK")
+""", ndev=2)

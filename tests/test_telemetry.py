@@ -70,6 +70,28 @@ def test_tag_innermost_collector_only():
     assert inner.stats().per_iteration.all_reduces == 1
 
 
+def test_tag_nested_same_name_unwinds_by_position():
+    """Exiting an inner same-name tag must pop ITS stack entry, not the
+    first occurrence of the name (list.remove semantics), so counts
+    recorded after the inner exit still land in the outer tag."""
+    from repro.telemetry.counters import counting, record_all_reduce, tag
+
+    with counting() as col:
+        with tag("iteration"):
+            with tag("solve"):
+                with tag("iteration"):   # same name, nested deeper
+                    record_all_reduce(1)
+                # inner "iteration" exited: the OUTER one must survive
+                assert col.tags == ["iteration", "solve"]
+                record_all_reduce(1)
+            record_all_reduce(1)
+        assert col.tags == []
+        record_all_reduce(1)
+    assert col.buckets["iteration"].all_reduces == 2
+    assert col.buckets["solve"].all_reduces == 1
+    assert col.buckets["setup"].all_reduces == 1
+
+
 def test_a_eff_t_eff():
     from repro.telemetry import a_eff, t_eff
 
