@@ -39,6 +39,13 @@ SOLVER_CEILINGS = {
     "cg/f64@5": 97,    # recorded 69 (tol 1e-5)
     "cg/f32": 104,     # recorded 74 (f32 rounding costs a few iterations)
     "mgcg/f32": 12,    # recorded 8
+    # pipelined-CG rows (PR 10): recorded at EXACTLY classic + 1 (the
+    # stopping test is one fused reduction stale), so the ceilings are
+    # the classic ceilings shifted by one
+    "pipecg": 121,     # recorded 86 (cg 85 + 1)
+    "pipecg+hide": 121,
+    "pipemgcg": 15,    # recorded 11 (mgcg 10 + 1)
+    "pipecg/per": 49,  # recorded 35 (cg/per 34 + 1)
     # fused-kernel rows (PR 8): the jacobi rows run a FIXED sweep count,
     # so the ceiling is exact; mgcg/fused is the dispatched mgcg solve
     # (same algorithm as mgcg -> same recorded 10 + headroom)

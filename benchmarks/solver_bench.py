@@ -15,6 +15,15 @@ projected) configuration and the mixed-precision path (``cg/f32`` /
 ``mgcg/f32``: end-to-end f32 stencil + halos with f64 ``acc_dtype``
 reductions, against ``cg/f64@5`` at the same f32-friendly tolerance).
 
+The pipelined-CG rows (``pipecg`` / ``pipecg+hide`` / ``pipemgcg`` /
+``pipecg/per``) measure the Ghysels–Vanroose schedule: ONE fused
+3-scalar all-reduce per iteration (vs 2 for classic) issued before the
+operator/preconditioner applies it overlaps with, at the cost of one
+extra iteration (stale stopping test) plus periodic residual
+replacement.  The companion ``allreduce_latency`` row records the
+latency FLOOR of a serially-dependent chained psum — the bound on what
+each saved reduction is worth per iteration on this fabric.
+
 Every row now carries the telemetry columns: the paper's ``T_eff``
 (GB/s, from the app's ``a_eff_per_iteration``), the exact per-solve halo
 bytes and all-reduce counts (trace-time counters of
@@ -57,7 +66,8 @@ def bench(app, method, tol, overlap=False):
         t0 = time.perf_counter()
         u, info = app.solve(method, tol=tol, overlap=overlap)
         wall = time.perf_counter() - t0
-    tot = info.comm.totals(info.iterations)
+    nrep = int(getattr(info, "replacements", 0))
+    tot = info.comm.totals(info.iterations, nrep)
     res = info.residuals
     return dict(
         iters=info.iterations, relres=float(info.relres),
@@ -68,7 +78,10 @@ def bench(app, method, tol, overlap=False):
         halo_exchanges=int(tot.halo_exchanges),
         all_reduces=int(tot.all_reduces),
         all_reduces_per_iter=int(info.comm.per_iteration.all_reduces),
+        all_reduce_scalars_per_iter=int(
+            info.comm.per_iteration.all_reduce_scalars),
         halo_bytes_per_iter=int(info.comm.per_iteration.halo_bytes),
+        replacements=nrep,
         residual_first=float(res[0]) if len(res) else None,
         residual_last=float(res[-1]) if len(res) else None,
     )
@@ -83,11 +96,21 @@ for label, method, overlap in [("cg", "cg", False), ("cg+hide", "cg", True),
                                ("mg", "mg", False)]:
     rows[label] = bench(app, method, {tol}, overlap)
 
+# pipelined CG (Ghysels-Vanroose): ONE fused all-reduce per iteration
+# (gamma, delta and ||r||^2 batched into a single psum) issued before
+# the operator/preconditioner applies it overlaps with; +hide stacks
+# halo overlap on top, so BOTH collectives of the iteration hide.
+for label, method, overlap in [("pipecg", "pipecg", False),
+                               ("pipecg+hide", "pipecg", True),
+                               ("pipemgcg", "pipemgcg", False)]:
+    rows[label] = bench(app, method, {tol}, overlap)
+
 # all-periodic (singular, nullspace-projected) variants: the canonical
 # fully-periodic benchmark configuration of the scalable-stencil papers
 papp = Poisson3D(nx={nx}, ny={nx}, nz={nx}, dims=DIMS,
                  periodic=(True, True, True))
-for label, method in [("cg/per", "cg"), ("mgcg/per", "mgcg")]:
+for label, method in [("cg/per", "cg"), ("mgcg/per", "mgcg"),
+                      ("pipecg/per", "pipecg")]:
     rows[label] = bench(papp, method, {tol})
 
 # mixed precision: the SAME problem solved end-to-end in f32 (f32
@@ -198,6 +221,40 @@ rows["jacobi/fused"] = smoother_row(run_fused, per_fused)
 # trajectory gate tracks the fused path explicitly across backends.
 rows["mgcg/fused"] = bench(app, "mgcg", {tol})
 
+# all-reduce latency floor: NRED serially-DEPENDENT 3-scalar psums (the
+# exact payload of pipelined CG's fused reduction) chained through one
+# compiled fori_loop — each reduce must complete before the next can
+# start, so wall/NRED is the per-reduce latency no schedule can hide.
+# This floor x the iteration count is the reduction time a classic
+# 2-reduce iteration pays ON TOP of pipecg; the pipecg-vs-cg s_per_iter
+# delta is bounded by it.
+from jax.sharding import PartitionSpec as SpecP
+from repro.solvers import reductions as red
+
+NRED = 200
+NRANKS = 1
+for d in DIMS:
+    NRANKS *= d
+
+def _ar_chain():
+    def body(_, acc):
+        return red.psum(g.topo, acc) * (1.0 / NRANKS)
+    return jax.lax.fori_loop(0, NRED, body, jnp.ones((3,), jnp.float64))
+
+ar_j = jax.jit(jax.shard_map(_ar_chain, mesh=g.mesh, in_specs=(),
+                             out_specs=SpecP(), check_vma=False))
+ar_j().block_until_ready()                          # warm-up (compile)
+ar_walls = []
+for _ in range(3):
+    t0 = time.perf_counter()
+    ar_j().block_until_ready()
+    ar_walls.append(time.perf_counter() - t0)
+ar_wall = min(ar_walls)
+rows["allreduce_latency"] = dict(
+    n_reduces=NRED, scalars_per_reduce=3, wall_s=ar_wall,
+    s_per_reduce=ar_wall / NRED,
+)
+
 # comm/compute split of a CG iteration via hide_apply on/off: the hidden
 # variant overlaps the exchange, so the per-iteration delta is the
 # EXPOSED communication time of the plain operator.
@@ -283,6 +340,15 @@ def run(quick: bool = True, ndev: int = 8):
     print(f"  comm/compute split (hide_apply on/off): exposed comm "
           f"{split['exposed_comm_s_per_iter']*1e3:.2f} ms/iter "
           f"({split['exposed_comm_fraction']*100:.0f}% of the plain iteration)")
+    pc, cc = res["rows"]["pipecg"], res["rows"]["cg"]
+    ar = res["rows"]["allreduce_latency"]
+    print(f"  pipelined cg: {pc['all_reduces_per_iter']} all-reduce/iter "
+          f"(x{pc['all_reduce_scalars_per_iter']} scalars fused) vs "
+          f"{cc['all_reduces_per_iter']} classic, {pc['iters']} vs "
+          f"{cc['iters']} iters, {pc['s_per_iter']*1e3:.2f} vs "
+          f"{cc['s_per_iter']*1e3:.2f} ms/iter; "
+          f"all-reduce latency floor {ar['s_per_reduce']*1e6:.1f} us "
+          f"(chained 3-scalar psum)")
     r64, r32 = res["rows"]["cg/f64@5"], res["rows"]["cg/f32"]
     print(f"  mixed precision (cg @ tol {f32_tol}): f64 {r64['iters']} iters "
           f"{r64['s_per_iter']*1e3:.2f} ms/iter -> f32 {r32['iters']} iters "

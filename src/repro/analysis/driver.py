@@ -121,10 +121,17 @@ def sweep(targets=None) -> dict[str, Report]:
 
         return lambda: capture_check(run)
 
-    def stokes(*, precond):
+    def stokes(*, precond, variant="classic"):
         def run():
             app = Stokes3D()
-            app.velocity_solve(precond=precond, maxiter=5)
+            app.velocity_solve(precond=precond, maxiter=5, variant=variant)
+
+        return lambda: capture_check(run)
+
+    def stokes_schur():
+        def run():
+            app = Stokes3D()
+            app.solve(outer_maxiter=2, compiled=True)
 
         return lambda: capture_check(run)
 
@@ -132,8 +139,12 @@ def sweep(targets=None) -> dict[str, Report]:
         "poisson/cg[dirichlet]": poisson("cg"),
         "poisson/cg[dirichlet,overlap]": poisson("cg", overlap=True),
         "poisson/cg[periodic]": poisson("cg", periodic=True),
+        "poisson/pipecg[dirichlet]": poisson("pipecg"),
+        "poisson/pipecg[dirichlet,overlap]": poisson("pipecg", overlap=True),
+        "poisson/pipecg[periodic]": poisson("pipecg", periodic=True),
         "poisson/mgcg[dirichlet]": poisson("mgcg"),
         "poisson/mgcg[periodic]": poisson("mgcg", periodic=True),
+        "poisson/pipemgcg[dirichlet]": poisson("pipemgcg"),
         "poisson/mgcg[dirichlet,interpret]": poisson(
             "mgcg", use_kernel="interpret"),
         "poisson/pt[dirichlet]": poisson("pt"),
@@ -143,7 +154,10 @@ def sweep(targets=None) -> dict[str, Report]:
         "twophase/pressure[direct]": twophase(overlap=False),
         "twophase/pressure[overlap]": twophase(overlap=True),
         "stokes/velocity[stress]": stokes(precond="stress"),
+        "stokes/velocity[stress,pipelined]": stokes(
+            precond="stress", variant="pipelined"),
         "stokes/velocity[noprecond]": stokes(precond=None),
+        "stokes/schur[compiled]": stokes_schur(),
         "kernels/library": lambda: Report(blockspec.check_kernel_library()),
     }
 

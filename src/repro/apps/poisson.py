@@ -165,10 +165,15 @@ class Poisson3D:
     # ------------------------------------------------------------------
     def solve(self, method: str = "cg", tol: float = 1e-6,
               maxiter: int | None = None, overlap: bool = False, **kw):
-        """Solve with ``method`` in {"cg", "mgcg", "pt", "mg"}.
+        """Solve with ``method`` in {"cg", "pipecg", "mgcg", "pipemgcg",
+        "pt", "mg"}.
 
-        ``overlap=True`` (cg/mgcg) switches the operator to the
-        communication-hiding application.  Returns ``(u, info)``.
+        ``pipecg``/``pipemgcg`` are the Ghysels–Vanroose pipelined
+        schedules of cg/mgcg (``solvers.cg(variant="pipelined")``): one
+        fused all-reduce per iteration, overlapped with the operator and
+        preconditioner applies.  ``overlap=True`` (cg family) switches
+        the operator to the communication-hiding application.  Returns
+        ``(u, info)``.
         """
         with self._observe(), \
                 tele.region(f"poisson.solve.{method}",
@@ -185,6 +190,9 @@ class Poisson3D:
     def _solve(self, method, tol, maxiter, overlap, **kw):
         apply_A = self.apply_A_overlap if overlap else self.apply_A
         project = "constant" if self.singular else None
+        if method in ("pipecg", "pipemgcg"):
+            kw.setdefault("variant", "pipelined")
+            method = "cg" if method == "pipecg" else "mgcg"
         if method == "cg":
             return solvers.cg(
                 self.grid, apply_A, self.b, tol=tol,

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P_
 
+from repro.analysis import capture as _ana
 from repro.core import boundary, init_global_grid
 from repro import fields
 from repro import solvers
@@ -312,12 +313,15 @@ class Stokes3D:
 
     def velocity_solve(self, P: Field | None = None, x0: FieldSet | None = None,
                        precond="stress", tol: float = 1e-8,
-                       maxiter: int = 2000):
+                       maxiter: int = 2000, variant: str = "classic"):
         """Solve ``A V = F - grad P`` for the staggered velocity system.
 
         One :func:`repro.solvers.cg.cg` call on the whole ``FieldSet``;
         ``precond`` picks the multigrid preconditioner (see
-        :meth:`_precond`).
+        :meth:`_precond`); ``variant="pipelined"`` runs the
+        Ghysels–Vanroose single-reduction schedule over the staggered
+        tree (one fused all-reduce per iteration across all three
+        components).
         """
         b = self._rhs(P) if P is not None else self.F
         with self._observe(), \
@@ -325,7 +329,7 @@ class Stokes3D:
             return solvers.cg(
                 self.grid, self.apply_A, b, x0=x0, tol=tol, maxiter=maxiter,
                 apply_M=self._precond(precond),
-                args=(self.eta,))
+                args=(self.eta,), variant=variant)
 
     def _observe(self):
         """Runtime observability per the app's ``heartbeat``/``flight_dir``
@@ -476,14 +480,23 @@ class Stokes3D:
     # ------------------------------------------------------------------
     def solve(self, tol: float = 1e-8, outer_maxiter: int = 400,
               inner_tol: float | None = None, precond="stress",
-              method: str = "schur"):
+              method: str = "schur", compiled: bool = True,
+              variant: str = "classic"):
         """Solve the full Stokes system.  Returns ``(V, P, StokesInfo)``.
 
         ``method="schur"`` runs CG on the viscosity-preconditioned Schur
         complement ``(-div A^-1 grad) P = -div A^-1 F`` — each matvec
         one velocity solve to ``inner_tol`` (default ``tol * 1e-2``,
         floored at 1e-12; the Schur matvec is only as exact as the inner
-        solve, so the inner tolerance tracks the outer one).
+        solve, so the inner tolerance tracks the outer one).  With
+        ``compiled=True`` (the default) the WHOLE Schur iteration — the
+        outer CG recurrence with one nested :func:`solvers.cg_local`
+        velocity solve per matvec — runs as one ``lax.while_loop`` inside
+        one compiled ``shard_map`` program, removing the ~10 host round
+        trips per outer iteration of the Python loop;
+        ``compiled=False`` keeps that Python loop as the fallback (the
+        two agree iteration-for-iteration).  ``variant`` selects the
+        inner velocity Krylov schedule (``"classic"`` | ``"pipelined"``).
         ``method="uzawa"`` keeps the Richardson loop
         ``P <- P - theta eta div V`` (velocity solves to the same
         ``inner_tol``, warm-started).  Both converge when ``||div V||``
@@ -495,11 +508,16 @@ class Stokes3D:
             raise ValueError(f"unknown method {method!r}")
         inner_tol = max(tol * 1e-2, 1e-12) if inner_tol is None else inner_tol
         with self._observe(), \
-                tele.region(f"stokes.solve.{method}", precond=str(precond)):
+                tele.region(f"stokes.solve.{method}", precond=str(precond),
+                            compiled=compiled and method == "schur"):
             if method == "uzawa":
                 return self._solve_uzawa(tol, outer_maxiter, inner_tol,
-                                         precond)
-            return self._solve_schur(tol, outer_maxiter, inner_tol, precond)
+                                         precond, variant)
+            if compiled:
+                return self._solve_schur_compiled(
+                    tol, outer_maxiter, inner_tol, precond, variant)
+            return self._solve_schur(tol, outer_maxiter, inner_tol, precond,
+                                     variant)
 
     # ------------------------------------------------------------------
     # paper's T_eff convention
@@ -517,7 +535,8 @@ class Stokes3D:
         """T_eff in GB/s for a recorded velocity solve."""
         return tele.t_eff(self.a_eff_per_iteration(), info.s_per_iter())
 
-    def _solve_uzawa(self, tol, outer_maxiter, inner_tol, precond):
+    def _solve_uzawa(self, tol, outer_maxiter, inner_tol, precond,
+                     variant="classic"):
         V = FieldSet(vx=fields.zeros(self.grid, "xface", self.dtype),
                      vy=fields.zeros(self.grid, "yface", self.dtype),
                      vz=fields.zeros(self.grid, "zface", self.dtype))
@@ -527,7 +546,7 @@ class Stokes3D:
         k = 0
         for k in range(1, outer_maxiter + 1):
             V, info = self.velocity_solve(P=P, x0=V, precond=precond,
-                                          tol=inner_tol)
+                                          tol=inner_tol, variant=variant)
             inner_total += info.iterations
             if k == 1:
                 first_inner = info.iterations
@@ -558,10 +577,12 @@ class Stokes3D:
                 f"{info.iterations} iterations — raise inner_tol/"
                 "maxiter or strengthen the velocity preconditioner")
 
-    def _solve_schur(self, tol, outer_maxiter, inner_tol, precond):
+    def _solve_schur(self, tol, outer_maxiter, inner_tol, precond,
+                     variant="classic"):
         # b_S = -div A^-1 F: one velocity solve for the rhs (and the
         # warm start of the final velocity recovery).
-        V0, info0 = self.velocity_solve(precond=precond, tol=inner_tol)
+        V0, info0 = self.velocity_solve(precond=precond, tol=inner_tol,
+                                        variant=variant)
         self._check_inner(info0, "rhs A V0 = F")
         inner_total = first_inner = info0.iterations
         b_S, d0 = self._neg_div(V0)
@@ -579,7 +600,8 @@ class Stokes3D:
             G = self._grad_P(p)
             W, wi = solvers.cg(
                 self.grid, self.apply_A, G, tol=inner_tol, maxiter=2000,
-                apply_M=self._precond(precond), args=(self.eta,))
+                apply_M=self._precond(precond), args=(self.eta,),
+                variant=variant)
             self._check_inner(wi, f"matvec A W = grad p, outer step {k}")
             inner_total += wi.iterations
             Sp, _ = self._neg_div(W)
@@ -593,11 +615,144 @@ class Stokes3D:
             res = self._pdot(r, r) ** 0.5
         # Recover the velocity for the final pressure (warm start: V0).
         V, infoF = self.velocity_solve(P=P, x0=V0, precond=precond,
-                                       tol=inner_tol)
+                                       tol=inner_tol, variant=variant)
         self._check_inner(infoF, "final A V = F - grad P")
         inner_total += infoF.iterations
         rm, _ = self.residuals(V, P)
         relres_div = res / d0
+        return V, P, StokesInfo(
+            outer_iterations=k, inner_iterations=inner_total,
+            first_inner_iterations=first_inner,
+            relres_momentum=rm, relres_div=relres_div,
+            converged=relres_div <= tol,
+        )
+
+    def _solve_schur_compiled(self, tol, outer_maxiter, inner_tol, precond,
+                              variant="classic", inner_maxiter=2000):
+        """The Schur-CG outer loop of :meth:`_solve_schur` as ONE compiled
+        ``shard_map`` program: a ``lax.while_loop`` whose body nests a
+        whole :func:`repro.solvers.cg_local` velocity solve per Schur
+        matvec, with the preconditioner setup hoisted once above it.  The
+        Python loop pays ~10 host round trips per outer iteration (grad,
+        inner solve dispatch, div, three dots, two updates, Ms); here the
+        host dispatches once and reads back five scalars.  Inner-solve
+        convergence is carried as a flag (plus the worst inner relative
+        residual) and raised on the host AFTER the program returns — a
+        device-side abort would need a collective inside a branch, which
+        the collective-congruence analyzer rightly rejects.
+        """
+        g = self.grid
+        pre = self._precond(precond)
+        spacing = self.spacing
+
+        def _local(F, P0, eta):
+            M = pre.setup(eta) if pre is not None else None
+            Mb = None if M is None else (lambda t: M(t))
+
+            def A(V):
+                return self.apply_A(V, eta)
+
+            mc = fields.interior_mask(g, "center", self.dtype)
+            ms = fields.solve_mask(g, "center", self.dtype)
+
+            def pdot(a, b):
+                return red.dot(g, a, b, ms)
+
+            def negdiv(V):
+                d = -ops.div(V, spacing).data * mc
+                mean = red.masked_mean(g, d, ms)
+                d = (d - mean.astype(d.dtype)) * mc
+                return d, jnp.sqrt(red.dot(g, d, d, ms))
+
+            def apply_Ms(rd):
+                z = eta.data * rd * mc
+                mean = red.masked_mean(g, z, ms)
+                return (z - mean.astype(z.dtype)) * mc
+
+            def gradp(Ph):
+                # Ph is an ALREADY halo-updated center array — the call
+                # sites share one exchange between the gradient stencil
+                # and any other use of the refreshed pressure.
+                G = ops.grad(Field(g, Ph, "center"), spacing)
+                return FieldSet(vx=G.x, vy=G.y, vz=G.z)
+
+            def vsolve(b, x0):
+                x, kk, relres, _ = solvers.cg_local(
+                    g, A, b, x0, tol=inner_tol, maxiter=inner_maxiter,
+                    apply_M=Mb, variant=variant)
+                return x, kk, relres
+
+            zerosV = jax.tree_util.tree_map(jnp.zeros_like, F)
+            V0, k0, rr0 = vsolve(F, zerosV)
+            b_S, d0 = negdiv(V0)
+            d0 = jnp.where(d0 > 0, d0, jnp.ones_like(d0))
+            r = b_S
+            z = apply_Ms(r)
+            p = z
+            rz, rr = red.tree_dot_many(g, ((r, z), (r, r)), ms)
+            res = jnp.sqrt(rr)
+            carry0 = (P0.data, r, p, rz, res,
+                      jnp.zeros((), jnp.int32), k0,
+                      rr0 <= inner_tol, rr0)
+
+            def cond(c):
+                res, k, ok = c[4], c[5], c[7]
+                return (res > tol * d0) & (k < outer_maxiter) & ok
+
+            def body(c):
+                Pd, r, p, rz, _, k, itot, ok, worst = c
+                # Schur matvec: one whole velocity solve per outer step,
+                # nested inside this while_loop body.
+                W, kw, rrw = vsolve(gradp(g.update_halo(p)), zerosV)
+                Sp, _ = negdiv(W)
+                alpha = rz / pdot(p, Sp)
+                Pd = (Pd + alpha.astype(Pd.dtype) * p) * mc
+                r = (r - alpha.astype(r.dtype) * Sp) * mc
+                z = apply_Ms(r)
+                # <r, z> and ||r||^2 fused into one all-reduce, like the
+                # classic preconditioned CG body.
+                rz_new, rr = red.tree_dot_many(g, ((r, z), (r, r)), ms)
+                beta = rz_new / rz
+                p = (z + beta.astype(p.dtype) * p) * mc
+                return (Pd, r, p, rz_new, jnp.sqrt(rr), k + 1, itot + kw,
+                        ok & (rrw <= inner_tol), jnp.maximum(worst, rrw))
+
+            Pd, _, _, _, res, k, itot, ok, worst = jax.lax.while_loop(
+                cond, body, carry0)
+            # Recover the velocity for the final pressure (warm start V0).
+            Ph = g.update_halo(Pd)
+            G = gradp(Ph)
+            rhsF = FieldSet(vx=F.vx - G.vx, vy=F.vy - G.vy, vz=F.vz - G.vz)
+            V, kf, rrf = vsolve(rhsF, V0)
+            P = Field(g, Ph, "center")
+            return (V, P, k, itot + kf, k0, res / d0,
+                    ok & (rrf <= inner_tol), jnp.maximum(worst, rrf))
+
+        def _build():
+            return jax.shard_map(
+                _local, mesh=g.mesh, in_specs=(g.spec, g.spec, g.spec),
+                out_specs=(g.spec, g.spec) + tuple(P_() for _ in range(6)),
+                check_vma=False)
+
+        P0 = fields.zeros(g, "center", self.dtype)
+        _ana.maybe_capture("stokes.schur", _build, (self.F, P0, self.eta),
+                           grid=g)
+        key = ("apps.stokes.schur", tol, outer_maxiter, inner_tol,
+               inner_maxiter, str(precond), variant, self.stress, self.bc,
+               self.dtype)
+        if key not in g._jit_cache:
+            g._jit_cache[key] = jax.jit(_build())
+        outs = g._jit_cache[key](self.F, P0, self.eta)
+        V, P = outs[0], outs[1]
+        k, inner_total, first_inner = int(outs[2]), int(outs[3]), int(outs[4])
+        relres_div, ok, worst = float(outs[5]), bool(outs[6]), float(outs[7])
+        if not ok:
+            raise RuntimeError(
+                "Schur-CG inner velocity solve did not converge inside the "
+                f"compiled outer loop (worst inner relres {worst:.2e} vs "
+                f"inner_tol {inner_tol:.2e}) — raise inner_tol/maxiter or "
+                "strengthen the velocity preconditioner")
+        rm, _ = self.residuals(V, P)
         return V, P, StokesInfo(
             outer_iterations=k, inner_iterations=inner_total,
             first_inner_iterations=first_inner,

@@ -77,6 +77,7 @@ class TwoPhase3D:
     tol: float = 1e-8        # implicit per-step relative solve tolerance
     maxiter: int = 500       # implicit per-step CG iteration cap
     overlap: bool = False    # hide_apply overlap on the implicit operator
+    variant: str = "classic"  # Krylov schedule: "classic" | "pipelined"
     hide: tuple | None = (8, 2, 2)   # explicit-step communication hiding
     periodic: tuple = (False, False, False)
     dims: tuple | None = None
@@ -239,7 +240,7 @@ class TwoPhase3D:
                 tol=self.tol if tol is None else tol,
                 maxiter=self.maxiter if maxiter is None else maxiter,
                 apply_M=self._precond() if self.method == "mgcg" else None,
-                args=(k, diag))
+                args=(k, diag), variant=self.variant)
 
     # ------------------------------------------------------------------
     # time stepping

@@ -38,9 +38,10 @@ from .reductions import (
     acc_dtype, dot, norm_l2, norm_linf, owned_mask, interior_mask, solve_mask,
     loc_solve_mask,
     dot_g, norm_l2_g, norm_linf_g, field_min, field_max,
-    field_min_g, field_max_g, tree_dot, tree_rhs_norm, masked_mean,
+    field_min_g, field_max_g, tree_dot, tree_dot_many, tree_rhs_norm,
+    masked_mean,
 )
-from .cg import cg, SolveInfo
+from .cg import cg, cg_local, SolveInfo
 from .pseudo_transient import pseudo_transient, PTInfo, optimal_parameters
 from .multigrid import (
     multigrid_solve, poisson_apply, poisson_diag, face_stencil, face_diag,
@@ -55,9 +56,9 @@ __all__ = [
     "acc_dtype", "dot", "norm_l2", "norm_linf", "owned_mask", "interior_mask", "solve_mask",
     "loc_solve_mask",
     "dot_g", "norm_l2_g", "norm_linf_g", "field_min", "field_max",
-    "field_min_g", "field_max_g", "tree_dot", "tree_rhs_norm",
-    "masked_mean",
-    "cg", "SolveInfo",
+    "field_min_g", "field_max_g", "tree_dot", "tree_dot_many",
+    "tree_rhs_norm", "masked_mean",
+    "cg", "cg_local", "SolveInfo",
     "pseudo_transient", "PTInfo", "optimal_parameters",
     "multigrid_solve", "poisson_apply", "poisson_diag",
     "face_stencil", "face_diag",

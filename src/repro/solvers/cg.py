@@ -18,6 +18,23 @@ face-located velocity components of a Stokes solve) with location-aware
 ownership/unknown masks per leaf, all reduced in a single all-reduce per
 dot product.  ``apply_A`` maps the pytree to the same structure.
 
+Two Krylov schedules are provided (``variant=``):
+
+* ``"classic"`` — textbook preconditioned CG.  2 all-reduces per
+  iteration: ``<p, Ap>`` for ``alpha``, then ``<r, z>`` and ``||r||^2``
+  FUSED into one :func:`repro.solvers.reductions.tree_dot_many` call
+  (unpreconditioned CG reads ``||r||`` off ``<r, z>`` directly).
+* ``"pipelined"`` — Ghysels–Vanroose pipelined CG: ONE fused all-reduce
+  per iteration carrying ``<r, u>``, ``<w, u>`` and ``||r||^2`` together,
+  issued BEFORE the iteration's preconditioner + operator applies, which
+  are data-independent of it — the reduction latency hides behind the
+  heaviest compute of the loop, the same schedule-freedom discipline
+  ``comm_hiding`` verifies for halos.  The extra recurrences drift in
+  finite precision, so every ``replace_every`` iterations the residual
+  and its auxiliaries are recomputed exactly (``r = b - A x``) in a
+  nested-loop segment structure (no ``lax.cond`` — collective congruence
+  holds on every path).
+
 Convergence is judged on the deduplicated global residual norm (halo
 overlap cells masked via :mod:`repro.solvers.reductions`), so the result
 is identical to a single-device solve of the true global system.
@@ -26,6 +43,7 @@ is identical to a single-device solve of the true global system.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable
 
@@ -36,11 +54,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro import telemetry as tele
 from repro.analysis import capture as _ana
+from repro.analysis import markers as _an
 from repro.core.grid import ImplicitGlobalGrid
 from repro.core.locations import is_field_node as _is_field_node
 from repro.telemetry.flight import note_solve as _note_solve
 from repro.telemetry import health as _health
 from . import reductions as red
+
+VARIANTS = ("classic", "pipelined")
 
 
 @dataclasses.dataclass
@@ -49,14 +70,22 @@ class SolveInfo:
 
     ``residuals[j]`` is the RELATIVE residual after iteration ``j + 1``
     (device-recorded inside the solve loop's carry — no extra host syncs;
-    its last entry equals ``relres``).  ``wall_s`` is the host wall time
-    of the solve call, synced on the results (the first call for a given
-    shape/operator includes compile time — benchmarks warm up first).
-    ``comm`` (populated when a :mod:`repro.telemetry` session is active)
-    is the exact per-solve communication split: halo exchanges/bytes per
-    dim and all-reduce counts, setup vs per-iteration.  ``status`` is the
-    typed :class:`repro.telemetry.SolveStatus` outcome — always
-    classified from the host scalars; under an active
+    its last entry equals ``relres``).  For ``variant="pipelined"`` the
+    history is one step stale by construction — ``residuals[j]`` is the
+    relative residual ENTERING iteration ``j + 1`` (still ending at
+    ``relres``); the pipelined loop learns ``||r_k||`` one iteration
+    late, which is what buys the single fused reduction.  ``wall_s`` is
+    the host wall time of the solve call, synced on the results (the
+    first call for a given shape/operator includes compile time —
+    benchmarks warm up first).  ``comm`` (populated when a
+    :mod:`repro.telemetry` session is active) is the exact per-solve
+    communication split: halo exchanges/bytes per dim and all-reduce
+    counts, setup vs per-iteration vs per-replacement;
+    ``replacements`` counts the residual-replacement segments actually
+    run (0 for classic CG), for ``comm.totals(iterations,
+    replacements)``.  ``status`` is the typed
+    :class:`repro.telemetry.SolveStatus` outcome — always classified
+    from the host scalars; under an active
     :func:`repro.telemetry.watch` the device-side probes refine it with
     stagnation/divergence detection and sticky early exit.
     """
@@ -69,6 +98,7 @@ class SolveInfo:
     wall_s: float | None = None
     comm: "tele.CommStats | None" = None
     status: "tele.SolveStatus | None" = None
+    replacements: int = 0
 
     def s_per_iter(self) -> float:
         """Wall seconds per iteration (NaN before timing is recorded)."""
@@ -110,6 +140,306 @@ def _sig(tree) -> tuple:
             tuple((tuple(l.shape), jnp.dtype(l.dtype).name) for l in leaves))
 
 
+def replacement_count(iterations: int, replace_every: int) -> int:
+    """Residual-replacement segments a pipelined solve of ``iterations``
+    ran: one per started segment of ``replace_every`` iterations (the
+    outer loop replaces unconditionally at each segment head, including
+    the k = 0 setup segment)."""
+    return math.ceil(int(iterations) / max(int(replace_every), 1))
+
+
+def cg_local(
+    grid: ImplicitGlobalGrid,
+    apply_A: Callable,
+    b,
+    x,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 1000,
+    apply_M: Callable | None = None,
+    project_nullspace: str | None = None,
+    variant: str = "classic",
+    replace_every: int = 50,
+    cfg=None,
+    name: str = "cg",
+):
+    """LOCAL-VIEW conjugate gradient: the whole Krylov loop as a pure
+    function over local shards, for composition INSIDE an existing
+    ``shard_map`` program (the compiled Schur outer loop nests one of
+    these per outer iteration).  ``apply_A`` / ``apply_M`` are plain
+    local-view callables of the unknown pytree (preconditioner setup
+    already bound); ``b`` / ``x`` are local shards.  Returns
+    ``(x, k, relres, hist)`` — plus a device health status when a
+    :func:`repro.telemetry.watch` config ``cfg`` is passed — with the
+    replicated scalars safe for further device-side control flow.
+    :func:`cg` is the host-level wrapper that adds sharding, caching and
+    telemetry around this function.
+    """
+    M = apply_M
+    red_masks, unk_masks = _mask_trees(grid, b)
+
+    def mdot(u, v):
+        return red.tree_dot(grid, u, v, red_masks)
+
+    def mdots(*pairs):
+        return red.tree_dot_many(grid, pairs, red_masks)
+
+    def masked(t):
+        return _tmap(lambda a, m: a * m, t, unk_masks)
+
+    if project_nullspace == "constant":
+        def project(t):
+            # The constant nullspace is PER COMPONENT (each leaf of a
+            # staggered system carries its own constant mode), so
+            # subtract each leaf's own masked mean — on the unknowns
+            # only (a Dirichlet ring, if any dim has one, keeps its
+            # BC data).
+            def one(a, mr, mu):
+                mean = red.masked_mean(grid, a, mr)
+                return a - mean.astype(a.dtype) * mu
+
+            return _tmap(one, t, red_masks, unk_masks)
+
+        b = project(b)
+    else:
+        def project(t):
+            return t
+
+    bnorm = red.tree_rhs_norm(grid, b, red_masks)
+
+    if variant == "classic":
+        final = _classic_loop(grid, apply_A, M, b, x, tol=tol,
+                              maxiter=maxiter, project=project,
+                              masked=masked, mdot=mdot, mdots=mdots,
+                              bnorm=bnorm, cfg=cfg, name=name)
+    else:
+        final = _pipelined_loop(grid, apply_A, M, b, x, tol=tol,
+                                maxiter=maxiter,
+                                replace_every=replace_every,
+                                project=project, masked=masked,
+                                mdot=mdot, mdots=mdots, bnorm=bnorm,
+                                cfg=cfg, name=name)
+    x, res, k, hist = final[:4]
+    # Return the mean-zero representative of a singular solve, and
+    # refresh the seam halo cells of x (never written by the masked
+    # updates) so gather() sees the solution everywhere.
+    x = project(x)
+    # The tail exchange is part of cg_local's RETURN CONTRACT ("the
+    # iterate comes back halo-fresh"), not an operator dependency —
+    # callers that feed x straight into a halo-updating operator (e.g.
+    # warm-starting a follow-up solve) legitimately re-exchange it, so
+    # the contract marker keeps the redundancy rule quiet there.
+    x = _tmap(lambda a: _an.exchange_out(
+        grid.update_halo(a), width=grid.halo,
+        site="solvers.cg.tail.contract", contract=True), x)
+    if cfg is None:
+        return x, k, res / bnorm, hist
+    status = _health.finalize(final[4], res, bnorm, tol)
+    _health.emit_final(name, grid.topo, k, res / bnorm, status, hist,
+                       maxiter)
+    return x, k, res / bnorm, hist, status
+
+
+def _classic_loop(grid, apply_A, M, b, x, *, tol, maxiter, project, masked,
+                  mdot, mdots, bnorm, cfg, name):
+    """Textbook preconditioned CG body.  Returns ``(x, res, k, hist[,
+    hc])`` from the while_loop carry."""
+    r = masked(_tmap(lambda bi, ai: bi - ai, b, apply_A(x)))
+    z = project(masked(M(r))) if M is not None else project(r)
+    p = z
+    rz = mdot(r, z)
+    res = jnp.sqrt(mdot(r, r))
+    # Per-iteration relative-residual history, recorded into the
+    # while_loop carry (device-side buffer; ONE transfer at the end,
+    # no per-iteration host syncs).
+    hist0 = jnp.zeros((maxiter,), res.dtype)
+    res0 = res
+
+    def cond(carry):
+        res, k = carry[4], carry[5]
+        go = (res > tol * bnorm) & (k < maxiter)
+        if cfg is not None:
+            go = go & _health.carry_ok(carry[7])
+        return go
+
+    def body(carry):
+        x, r, p, rz, _, k, hist = carry[:7]
+        # tele.tag is a trace-time bucket marker for the comm
+        # counters (see repro.telemetry.counters) — pure Python, no
+        # effect on the lowered program.
+        with tele.tag("iteration"):
+            Ap = masked(apply_A(p))
+            alpha = rz / mdot(p, Ap)
+            x = _tmap(lambda xi, pi: xi + alpha.astype(xi.dtype) * pi, x, p)
+            r = _tmap(lambda ri, ai: ri - alpha.astype(ri.dtype) * ai, r, Ap)
+            if M is not None:
+                z = project(masked(M(r)))
+                # <r, z> and ||r||^2 FUSED into one all-reduce: the
+                # preconditioned stopping test costs no extra collective
+                # (2 all-reduces/iteration, matching the
+                # unpreconditioned path's count).
+                rz_new, rr = mdots((r, z), (r, r))
+                res = jnp.sqrt(rr)
+            else:
+                z = project(r)
+                rz_new = mdot(r, z)
+                # unpreconditioned: rz_new IS <r, r>; skip the extra
+                # all-reduce entirely
+                res = jnp.sqrt(rz_new)
+            beta = rz_new / rz
+            p = _tmap(lambda zi, pi: zi + beta.astype(zi.dtype) * pi, z, p)
+            hist = jax.lax.dynamic_update_index_in_dim(
+                hist, (res / bnorm).astype(hist.dtype), k, 0)
+        out = (x, r, p, rz_new, res, k + 1, hist)
+        if cfg is not None:
+            # the residual is already globally reduced and replicated,
+            # so the probe classifies with zero extra collectives
+            hc = _health.probe(cfg, carry[7], res, res0)
+            _health.maybe_heartbeat(cfg, name, grid.topo, k + 1,
+                                    res / bnorm)
+            out = out + (hc,)
+        return out
+
+    carry0 = (x, r, p, rz, res, jnp.zeros((), jnp.int32), hist0)
+    if cfg is not None:
+        carry0 = carry0 + (_health.carry_init(res),)
+    final = jax.lax.while_loop(cond, body, carry0)
+    out = (final[0], final[4], final[5], final[6])
+    return out if cfg is None else out + (final[7],)
+
+
+def _pipelined_loop(grid, apply_A, M, b, x, *, tol, maxiter, replace_every,
+                    project, masked, mdot, mdots, bnorm, cfg, name):
+    """Ghysels–Vanroose pipelined CG body.
+
+    Per iteration ONE fused all-reduce carries ``gamma = <r, u>``,
+    ``delta = <w, u>`` and ``||r||^2``, issued before the
+    preconditioner apply ``m = M w`` and operator apply ``n = A m`` it
+    overlaps with; the remaining work is recurrences.  The stopping test
+    is therefore one iteration stale (the loop runs one extra iteration
+    relative to classic CG and reports the last PROVEN residual — the
+    true final residual is at least as small).
+
+    Residual replacement: the loop nests an inner pipelined loop of at
+    most ``replace_every`` iterations inside an outer segment loop whose
+    body FIRST recomputes ``r = b - A x``, ``u = M r``, ``w = A u`` and
+    the search-direction auxiliaries ``s = A p``, ``q = M s``,
+    ``z = A q`` exactly.  Replacement is unconditional at each segment
+    head — a ``lax.cond`` with collectives in one branch would break
+    collective congruence (every rank must meet every collective), the
+    exact pattern the PR 9 analyzer rejects.  Returns ``(x, res, k,
+    hist[, hc])``.
+    """
+    if replace_every is None or int(replace_every) <= 0:
+        replace_every = maxiter
+    replace_every = int(replace_every)
+
+    def prec(t):
+        # segment heads only: nullspace projection costs a masked_mean
+        # all-reduce, so it runs at setup/replacement, not per iteration
+        return project(masked(M(t))) if M is not None else project(t)
+
+    def precit(t):
+        # per-iteration preconditioner apply — NO projection, keeping
+        # the single fused reduction.  Constant-mode drift is harmless
+        # to the Krylov scalars (r and w stay in range(A), orthogonal
+        # to the constants) and is cleaned at each replacement and the
+        # final project(x).
+        return masked(M(t)) if M is not None else t
+
+    def axpy(add, a, ti, tj):
+        # ti + a * tj (add) or ti - a * tj, with the f64 scalar cast
+        # back per leaf (mixed precision: f32 fields, f64 scalars)
+        sgn = 1.0 if add else -1.0
+        return _tmap(lambda u, v: u + (sgn * a).astype(u.dtype) * v, ti, tj)
+
+    r0 = masked(_tmap(lambda bi, ai: bi - ai, b, apply_A(x)))
+    res = jnp.sqrt(mdot(r0, r0))
+    res0 = res
+    hist0 = jnp.zeros((maxiter,), res.dtype)
+    zeros = _tmap(jnp.zeros_like, b)
+    one = jnp.ones((), res.dtype)
+
+    # carry: x r u w p s q z gamma_prev alpha_prev res k hist [hc]
+    carry0 = (x, r0, zeros, zeros, zeros, zeros, zeros, zeros,
+              one, one, res, jnp.zeros((), jnp.int32), hist0)
+    if cfg is not None:
+        carry0 = carry0 + (_health.carry_init(res),)
+
+    def outer_cond(carry):
+        res, k = carry[10], carry[11]
+        go = (res > tol * bnorm) & (k < maxiter)
+        if cfg is not None:
+            go = go & _health.carry_ok(carry[13])
+        return go
+
+    def outer_body(carry):
+        x, _, _, _, p, _, _, _, gp, ap, res, k, hist = carry[:13]
+        with tele.tag("replacement"):
+            # Exact recomputation of the residual chain AND the
+            # search-direction auxiliaries (s = A p, q = M s, z = A q
+            # hold by induction of the recurrences — re-establish them
+            # from the carried p so drift resets each segment).  At
+            # k = 0 the auxiliaries are zeros and this doubles as the
+            # pipelined setup.
+            r = masked(_tmap(lambda bi, ai: bi - ai, b, apply_A(x)))
+            u = prec(r)
+            w = masked(apply_A(u))
+            s = masked(apply_A(p))
+            q = prec(s)
+            z = masked(apply_A(q))
+        limit = jnp.minimum(k + replace_every, maxiter)
+
+        def inner_cond(c):
+            res, k = c[10], c[11]
+            go = (res > tol * bnorm) & (k < limit)
+            if cfg is not None:
+                go = go & _health.carry_ok(c[13])
+            return go
+
+        def inner_body(c):
+            x, r, u, w, p, s, q, z, gp, ap, _, k, hist = c[:13]
+            with tele.tag("iteration"):
+                # THE one collective of the iteration, fired first; the
+                # preconditioner + operator applies below depend only on
+                # w, not on the reduced scalars, so XLA is free to
+                # overlap them with the all-reduce.
+                gamma, delta, rr = mdots((r, u), (w, u), (r, r))
+                m = precit(w)
+                n = masked(apply_A(m))
+                res = jnp.sqrt(rr)
+                beta = jnp.where(k > 0, gamma / gp,
+                                 jnp.zeros_like(gamma))
+                alpha = gamma / (delta - beta * gamma / ap)
+                z = axpy(True, beta, n, z)
+                q = axpy(True, beta, m, q)
+                s = axpy(True, beta, w, s)
+                p = axpy(True, beta, u, p)
+                x = axpy(True, alpha, x, p)
+                r = axpy(False, alpha, r, s)
+                u = axpy(False, alpha, u, q)
+                w = axpy(False, alpha, w, z)
+                hist = jax.lax.dynamic_update_index_in_dim(
+                    hist, (res / bnorm).astype(hist.dtype), k, 0)
+            out = (x, r, u, w, p, s, q, z, gamma, alpha, res, k + 1,
+                   hist)
+            if cfg is not None:
+                hc = _health.probe(cfg, c[13], res, res0)
+                _health.maybe_heartbeat(cfg, name, grid.topo, k + 1,
+                                        res / bnorm)
+                out = out + (hc,)
+            return out
+
+        seg0 = (x, r, u, w, p, s, q, z, gp, ap, res, k, hist)
+        if cfg is not None:
+            seg0 = seg0 + (carry[13],)
+        return jax.lax.while_loop(inner_cond, inner_body, seg0)
+
+    final = jax.lax.while_loop(outer_cond, outer_body, carry0)
+    out = (final[0], final[10], final[11], final[12])
+    return out if cfg is None else out + (final[13],)
+
+
 def cg(
     grid: ImplicitGlobalGrid,
     apply_A: Callable,
@@ -122,6 +452,8 @@ def cg(
     project_nullspace: str | None = None,
     dtype=None,
     args=(),
+    variant: str = "classic",
+    replace_every: int = 50,
 ):
     """Solve ``A x = b`` with (preconditioned) conjugate gradient.
 
@@ -150,7 +482,16 @@ def cg(
     carries its own constant mode).  Required for
     singular-but-consistent systems — the all-periodic Poisson /
     shift-free Helmholtz operator annihilates constants, so CG must be
-    kept on the mean-zero complement.
+    kept on the mean-zero complement.  The pipelined variant projects at
+    segment heads only (setup + each residual replacement) to keep the
+    single-reduction iteration; drift in between is cleaned every
+    ``replace_every`` iterations.
+
+    ``variant`` selects the Krylov schedule (see the module docstring):
+    ``"classic"`` (2 all-reduces/iteration, preconditioned or not) or
+    ``"pipelined"`` (Ghysels–Vanroose, 1 fused all-reduce/iteration
+    overlapped with the operator + preconditioner applies, with exact
+    residual replacement every ``replace_every`` iterations).
 
     ``dtype`` selects the END-TO-END solve precision: every leaf of
     ``b``/``x0`` (and of ``args``, so coefficient operands match) is
@@ -169,6 +510,9 @@ def cg(
         raise ValueError(
             f"unknown project_nullspace {project_nullspace!r}; "
             "expected None or 'constant'")
+    if variant not in VARIANTS:
+        raise ValueError(
+            f"unknown cg variant {variant!r}; expected one of {VARIANTS}")
     if dtype is not None:
         cast = lambda t: _tmap(lambda a: a.astype(dtype), t)  # noqa: E731
         b = cast(b)
@@ -184,99 +528,13 @@ def cg(
     cfg = _health.current()
 
     def _local(b, x, *ops):
-        red_masks, unk_masks = _mask_trees(grid, b)
-
-        def mdot(u, v):
-            return red.tree_dot(grid, u, v, red_masks)
-
-        def masked(t):
-            return _tmap(lambda a, m: a * m, t, unk_masks)
-
-        if project_nullspace == "constant":
-            def project(t):
-                # The constant nullspace is PER COMPONENT (each leaf of a
-                # staggered system carries its own constant mode), so
-                # subtract each leaf's own masked mean — on the unknowns
-                # only (a Dirichlet ring, if any dim has one, keeps its
-                # BC data).
-                def one(a, mr, mu):
-                    mean = red.masked_mean(grid, a, mr)
-                    return a - mean.astype(a.dtype) * mu
-
-                return _tmap(one, t, red_masks, unk_masks)
-
-            b = project(b)
-        else:
-            def project(t):
-                return t
-
-        bnorm = red.tree_rhs_norm(grid, b, red_masks)
-
         M = apply_M.setup(*ops) if hasattr(apply_M, "setup") else apply_M
-
-        r = masked(_tmap(lambda bi, ai: bi - ai, b, apply_A(x, *ops)))
-        z = project(masked(M(r))) if M is not None else project(r)
-        p = z
-        rz = mdot(r, z)
-        res = jnp.sqrt(mdot(r, r))
-        # Per-iteration relative-residual history, recorded into the
-        # while_loop carry (device-side buffer; ONE transfer at the end,
-        # no per-iteration host syncs).
-        hist0 = jnp.zeros((maxiter,), res.dtype)
-        res0 = res
-
-        def cond(carry):
-            res, k = carry[4], carry[5]
-            go = (res > tol * bnorm) & (k < maxiter)
-            if cfg is not None:
-                go = go & _health.carry_ok(carry[7])
-            return go
-
-        def body(carry):
-            x, r, p, rz, _, k, hist = carry[:7]
-            # tele.tag is a trace-time bucket marker for the comm
-            # counters (see repro.telemetry.counters) — pure Python, no
-            # effect on the lowered program.
-            with tele.tag("iteration"):
-                Ap = masked(apply_A(p, *ops))
-                alpha = rz / mdot(p, Ap)
-                x = _tmap(lambda xi, pi: xi + alpha.astype(xi.dtype) * pi, x, p)
-                r = _tmap(lambda ri, ai: ri - alpha.astype(ri.dtype) * ai, r, Ap)
-                z = project(masked(M(r))) if M is not None else project(r)
-                rz_new = mdot(r, z)
-                beta = rz_new / rz
-                p = _tmap(lambda zi, pi: zi + beta.astype(zi.dtype) * pi, z, p)
-                # unpreconditioned: rz_new IS <r, r>; skip the third all-reduce
-                res = jnp.sqrt(mdot(r, r)) if M is not None \
-                    else jnp.sqrt(rz_new)
-                hist = jax.lax.dynamic_update_index_in_dim(
-                    hist, (res / bnorm).astype(hist.dtype), k, 0)
-            out = (x, r, p, rz_new, res, k + 1, hist)
-            if cfg is not None:
-                # the residual is already globally reduced and replicated,
-                # so the probe classifies with zero extra collectives
-                hc = _health.probe(cfg, carry[7], res, res0)
-                _health.maybe_heartbeat(cfg, "cg", grid.topo, k + 1,
-                                        res / bnorm)
-                out = out + (hc,)
-            return out
-
-        carry0 = (x, r, p, rz, res, jnp.zeros((), jnp.int32), hist0)
-        if cfg is not None:
-            carry0 = carry0 + (_health.carry_init(res),)
-        final = jax.lax.while_loop(cond, body, carry0)
-        x, res, k, hist = final[0], final[4], final[5], final[6]
-        # Return the mean-zero representative of a singular solve, and
-        # refresh the seam halo cells of x (never written by the masked
-        # updates) so gather() sees the solution everywhere.
-        x = project(x)
-        x = _tmap(lambda a: grid.update_halo(a), x)
-        if cfg is None:
-            return x, k, res / bnorm, hist
-        status = _health.finalize(final[7], res, bnorm, tol)
-        _health.emit_final("cg", grid.topo, k, res / bnorm, status, hist,
-                           maxiter)
-        return x, k, res / bnorm, hist, status
+        Mb = None if M is None else (lambda t: M(t))
+        return cg_local(
+            grid, lambda u: apply_A(u, *ops), b, x,
+            tol=tol, maxiter=maxiter, apply_M=Mb,
+            project_nullspace=project_nullspace, variant=variant,
+            replace_every=replace_every, cfg=cfg)
 
     def _build():
         n_out = 4 if cfg is None else 5
@@ -296,7 +554,8 @@ def cg(
     # reuse the grid's executable cache so repeat solves skip retracing
     # (and finalize() releases them).
     key = ("solvers.cg", apply_A, apply_M, tol, maxiter, project_nullspace,
-           _sig(b), tuple(_sig(a) for a in args), cfg)
+           variant, replace_every, _sig(b), tuple(_sig(a) for a in args),
+           cfg)
     if key not in grid._jit_cache:
         grid._jit_cache[key] = jax.jit(_build())
 
@@ -320,8 +579,10 @@ def cg(
         dstatus = int(outs[4])
         jax.effects_barrier()  # flush heartbeat/final-health callbacks
     status = _health.classify(dstatus, relres, tol, k, maxiter)
+    nrep = (replacement_count(k, replace_every)
+            if variant == "pipelined" else 0)
     info = SolveInfo(iterations=k, relres=relres, converged=relres <= tol,
                      residuals=np.asarray(hist)[:k], wall_s=wall,
-                     comm=comm, status=status)
+                     comm=comm, status=status, replacements=nrep)
     _note_solve("cg", info)
     return x, info

@@ -215,6 +215,37 @@ def tree_dot(grid: ImplicitGlobalGrid, a, b, masks):
     return psum(grid.topo, total)
 
 
+def tree_dot_many(grid: ImplicitGlobalGrid, pairs, masks):
+    """Several deduplicated global tree-dots in ONE all-reduce.
+
+    ``pairs`` is a sequence of ``(a, b)`` pytree pairs, all sharing the
+    structure of ``masks``; the per-leaf masked partial sums of every
+    pair are stacked and ``psum``'d together, so one collective carries
+    e.g. ``rz``, ``pAp`` and ``||r||^2`` at once — the batched-reduction
+    primitive behind the pipelined-CG single-reduction schedule (and the
+    fused stopping test of classic preconditioned CG).  Returns a tuple
+    of replicated scalars, one per pair, accumulated per
+    :func:`acc_dtype` exactly like :func:`tree_dot`.
+    """
+    lm = jax.tree_util.tree_leaves(masks)
+    partials = []
+    for i, (a, b) in enumerate(pairs):
+        la = jax.tree_util.tree_leaves(a)
+        lb = jax.tree_util.tree_leaves(b)
+        if not (len(la) == len(lb) == len(lm)):
+            raise ValueError(
+                "tree_dot_many: mismatched pytrees in pair "
+                f"{i} — {len(la)}/{len(lb)}/{len(lm)} leaves for a/b/masks "
+                "(a silently truncated zip would drop components)")
+        partials.append(sum(
+            (x.astype(acc_dtype(x.dtype)) * y.astype(acc_dtype(x.dtype))
+             * m.astype(acc_dtype(x.dtype))).sum()
+            for x, y, m in zip(la, lb, lm)))
+    acc = jnp.result_type(*partials)
+    s = psum(grid.topo, jnp.stack([p.astype(acc) for p in partials]))
+    return tuple(s[i] for i in range(len(partials)))
+
+
 def tree_rhs_norm(grid: ImplicitGlobalGrid, b, masks):
     """Pytree :func:`rhs_norm`: ``||b||`` with the same zero-rhs guard."""
     bn = jnp.sqrt(tree_dot(grid, b, b, masks))

@@ -84,22 +84,33 @@ class CommStats:
 
     ``setup`` covers everything outside the solver's iteration loop
     (initial residual, preconditioner setup, final halo refresh);
-    ``per_iteration`` is one loop body.  ``totals(k)`` gives the whole
-    solve at ``k`` iterations.
+    ``per_iteration`` is one loop body.  ``per_replacement`` is one
+    residual-replacement segment header (pipelined CG recomputes
+    ``r = b - A x`` exactly every ``replace_every`` iterations; empty
+    for solvers without replacement).  ``totals(k, nrep)`` gives the
+    whole solve at ``k`` iterations and ``nrep`` replacements.
     """
 
     setup: CounterSnapshot
     per_iteration: CounterSnapshot
+    per_replacement: CounterSnapshot = dataclasses.field(
+        default_factory=CounterSnapshot)
 
-    def totals(self, iterations: int) -> CounterSnapshot:
-        return self.setup.scaled_sum(self.per_iteration, int(iterations))
+    def totals(self, iterations: int,
+               replacements: int = 0) -> CounterSnapshot:
+        out = self.setup.scaled_sum(self.per_iteration, int(iterations))
+        return out.scaled_sum(self.per_replacement, int(replacements))
 
-    def as_dict(self, iterations: int | None = None) -> dict:
+    def as_dict(self, iterations: int | None = None,
+                replacements: int = 0) -> dict:
         out = {"setup": self.setup.as_dict(),
-               "per_iteration": self.per_iteration.as_dict()}
+               "per_iteration": self.per_iteration.as_dict(),
+               "per_replacement": self.per_replacement.as_dict()}
         if iterations is not None:
-            out["totals"] = self.totals(iterations).as_dict()
+            out["totals"] = self.totals(iterations, replacements).as_dict()
             out["iterations"] = int(iterations)
+            if replacements:
+                out["replacements"] = int(replacements)
         return out
 
 
@@ -118,6 +129,8 @@ class _Collector:
         return CommStats(
             setup=self.buckets.get("setup", CounterSnapshot()),
             per_iteration=self.buckets.get("iteration", CounterSnapshot()),
+            per_replacement=self.buckets.get("replacement",
+                                             CounterSnapshot()),
         )
 
 

@@ -18,6 +18,10 @@ Recorded baselines (f64, 8 fake CPU ranks, dims=(2,2,2)):
   mgcg (Helmholtz-shifted cycle) 5/step
 * All-periodic Poisson 18^3 (nullspace-projected): cg 26, mgcg 10
 * Periodic (x/y) two-phase implicit pressure: mgcg 5/step
+* Pipelined CG (one fused all-reduce/iteration, stale stopping test):
+  EXACTLY classic + 1 everywhere recorded — Poisson 18^3 pipecg 55
+  (cg 54), pipemgcg 13 (mgcg 12); periodic Poisson pipecg 27 (cg 26);
+  Stokes staggered-tree velocity block 14^3 pipelined mgcg 8 (classic 7)
 """
 
 from _mp import run
@@ -62,6 +66,53 @@ assert mgcg.iterations <= 14, mgcg.iterations    # recorded 10
 print("OK")
 """,
         ndev=8,
+    )
+
+
+def test_pipelined_cg_iteration_ceilings():
+    """Pipelined CG pays for its overlapped single reduction with a
+    one-iteration-stale stopping test — recorded at EXACTLY classic + 1
+    on every problem class.  Ceilings allow the same ~40% headroom as
+    the classic pins plus the hard relative bound of the perf contract:
+    pipelined must stay within 1.3x the classic iteration count (center
+    Poisson, preconditioned, nullspace-projected periodic, and the
+    staggered-tree Stokes velocity block)."""
+    run(
+        """
+import math
+jax.config.update("jax_enable_x64", True)
+from repro.apps.poisson import Poisson3D
+from repro.apps.stokes import Stokes3D
+
+app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+_, cg = app.solve("cg", tol=1e-8)
+_, pipe = app.solve("pipecg", tol=1e-8)
+_, mg = app.solve("mgcg", tol=1e-8)
+_, pipemg = app.solve("pipemgcg", tol=1e-8)
+per = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 2, 2),
+                periodic=(True, True, True))
+_, pcg = per.solve("cg", tol=1e-8)
+_, ppipe = per.solve("pipecg", tol=1e-8)
+stk = Stokes3D(nx=8, ny=8, nz=8, dims=(2, 2, 2))
+_, smg = stk.velocity_solve(precond="stress", tol=1e-8)
+_, spmg = stk.velocity_solve(precond="stress", tol=1e-8,
+                             variant="pipelined")
+print("pipecg", pipe.iterations, "pipemgcg", pipemg.iterations,
+      "periodic pipecg", ppipe.iterations,
+      "stokes pipelined", spmg.iterations)
+for a in (pipe, pipemg, ppipe, spmg):
+    assert a.converged
+for p, c in ((pipe, cg), (pipemg, mg), (ppipe, pcg), (spmg, smg)):
+    assert p.iterations <= math.ceil(1.3 * c.iterations), \\
+        (p.iterations, c.iterations)
+assert pipe.iterations <= 77, pipe.iterations      # recorded 55
+assert pipemg.iterations <= 18, pipemg.iterations  # recorded 13
+assert ppipe.iterations <= 38, ppipe.iterations    # recorded 27
+assert spmg.iterations <= 11, spmg.iterations      # recorded 8
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
     )
 
 

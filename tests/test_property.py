@@ -269,6 +269,40 @@ def test_transfer_partition_of_unity(shape, loc):
 
 @settings(max_examples=8, deadline=None)
 @given(
+    shape=st.sampled_from([(8, 8, 8), (10, 8, 8), (8, 12, 10)]),
+    k=st.sampled_from([7, 12]),
+    replace_every=st.sampled_from([5, 50]),
+    periodic=st.booleans(),
+)
+def test_pipelined_cg_iterates_match_classic(shape, k, replace_every,
+                                             periodic):
+    """Ghysels–Vanroose pipelined CG is the SAME Krylov method as classic
+    CG, just rescheduled: after a fixed number of iterations (tol=0
+    forces exactly k steps) the iterates agree to roundoff, for any
+    residual-replacement period and for singular (periodic, projected)
+    problems alike."""
+    from repro import fields
+    from repro.apps.poisson import Poisson3D
+
+    app = Poisson3D(nx=shape[0], ny=shape[1], nz=shape[2],
+                    periodic=(periodic,) * 3, dtype=jnp.float32)
+    xc, ic = app.solve(method="cg", tol=0.0, maxiter=k)
+    xp, ip = app.solve(method="pipecg", tol=0.0, maxiter=k,
+                       replace_every=replace_every)
+    assert ic.iterations == ip.iterations == k
+    a = fields.gather(xc) if hasattr(xc, "loc") else np.asarray(xc)
+    b = fields.gather(xp) if hasattr(xp, "loc") else np.asarray(xp)
+    scale = np.abs(a).max() + 1e-30
+    np.testing.assert_allclose(b / scale, a / scale, atol=2e-5)
+    # the recurrences track the TRUE residual too (float32 here); the
+    # pipelined history is one step stale: its entry j+1 is classic's j
+    np.testing.assert_allclose(
+        np.asarray(ip.residuals)[1:],
+        np.asarray(ic.residuals)[: k - 1], rtol=1e-3, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
     n=st.integers(6, 20),
     width=st.integers(1, 4),
     seed=st.integers(0, 1000),

@@ -267,7 +267,7 @@ print("OK")
 """
 
 
-@pytest.mark.parametrize("method", ["cg", "pt", "mg"])
+@pytest.mark.parametrize("method", ["cg", "pt", "mg", "pipecg", "pipemgcg"])
 def test_poisson_matches_oracle_8dev(method):
     run(_SOLVE_SNIPPET.format(method=method, dims=(2, 2, 2)), ndev=8)
 
@@ -496,6 +496,76 @@ assert rel < 1e-4, rel
 print("OK")
 """,
         ndev=8,
+    )
+
+
+def test_pipecg_smoke_2rank():
+    """CI gate: 2-rank pipelined solves (plain + MG-preconditioned)
+    converge with the COUNTED single fused all-reduce per iteration."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro import telemetry as tele
+from repro.apps.poisson import Poisson3D
+
+app = Poisson3D(nx=10, ny=10, nz=10, dims=(2, 1, 1))
+with tele.session():
+    u, info = app.solve("pipecg", tol=1e-8)
+    u2, info2 = app.solve("pipemgcg", tol=1e-8)
+print("pipecg", info.iterations, "pipemgcg", info2.iterations)
+assert info.converged and info2.converged
+assert info.comm.per_iteration.all_reduces == 1
+assert info.comm.per_iteration.all_reduce_scalars == 3
+assert info2.comm.per_iteration.all_reduces == 1
+assert app.residual_norm(u) < 2e-8
+print("OK")
+""",
+        ndev=2,
+    )
+
+
+def test_pipecg_residual_replacement_bounds_f32_drift():
+    """The recurrence-tracked residual of pipelined CG drifts from the
+    TRUE residual ``b - A x`` in f32 — without replacement, a long solve
+    REPORTS convergence far below what the iterate actually achieves.
+    Periodic residual replacement is what keeps the stopping test
+    honest: with it, the true residual lands at the f32-attainable
+    level and the reported value stays within a small factor of it."""
+    run(
+        """
+from repro.apps.poisson import Poisson3D
+
+app = Poisson3D(nx=18, ny=18, nz=18, dims=(2, 2, 2), dtype=jnp.float32)
+bnorm = float(np.linalg.norm(app.grid.gather(app.b)))
+
+# replace_every > maxiter disables replacement entirely (single segment)
+xl, lying = app.solve("pipecg", tol=1e-6, maxiter=400,
+                      replace_every=10 ** 9)
+xr, honest = app.solve("pipecg", tol=1e-6, maxiter=400, replace_every=50)
+lie_true = app.residual_norm(xl) / bnorm
+rep_true = app.residual_norm(xr) / bnorm
+print("no-replacement: reported", float(lying.relres), "true", lie_true)
+print("replacement:    reported", float(honest.relres), "true", rep_true,
+      "segments", honest.replacements)
+assert honest.replacements >= 8
+# without replacement the recurrence keeps 'converging' past the
+# f32-attainable accuracy: the reported residual is a fiction, an
+# order of magnitude (recorded 42x) below what the iterate achieves
+assert float(lying.relres) < 1e-4, lying.relres
+assert lie_true > 10 * float(lying.relres), (lie_true, lying.relres)
+# replacement pins the drift: the true residual reaches the attainable
+# level (recorded ~13x below the no-replacement iterate's)...
+assert rep_true < 1e-4, rep_true
+assert rep_true < lie_true / 5, (rep_true, lie_true)
+# ...and the reported history stays honest: past the attainable level
+# it oscillates ABOVE the truth (stagnation spikes) instead of
+# fictitiously dipping an order of magnitude below it
+assert float(np.min(honest.residuals)) > rep_true / 10, (
+    float(np.min(honest.residuals)), rep_true)
+print("OK")
+""",
+        ndev=8,
+        timeout=900,
     )
 
 

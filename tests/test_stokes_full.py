@@ -140,6 +140,78 @@ print("OK")
     )
 
 
+def test_schur_compiled_matches_python_loop_8rank():
+    """The compiled Schur outer loop (whole outer CG as ONE jitted
+    shard_map program, no host round trip per outer iteration) is
+    ITERATION-IDENTICAL to the Python-loop fallback: same outer count,
+    same total inner iterations, same pressure/velocity to roundoff."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.stokes import Stokes3D
+from repro import fields
+
+app = Stokes3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+Vc, Pc, ic = app.solve(tol=1e-6, method="schur", compiled=True)
+Vp, Pp, ip = app.solve(tol=1e-6, method="schur", compiled=False)
+print("compiled:", ic)
+print("python:  ", ip)
+assert ic.converged and ip.converged
+assert ic.outer_iterations == ip.outer_iterations, (ic, ip)
+assert ic.inner_iterations == ip.inner_iterations, (ic, ip)
+assert ic.first_inner_iterations == ip.first_inner_iterations
+gp = app.grid.gather(Pp.data)[1:-1, 1:-1, 1:-1]
+gc = app.grid.gather(Pc.data)[1:-1, 1:-1, 1:-1]
+perr = np.abs(gc - gp).max() / (np.abs(gp).max() + 1e-300)
+verr = max(np.abs(fields.gather(Vc[k]) - fields.gather(Vp[k])).max()
+           for k in Vc.keys())
+print("P diff", perr, "V diff", verr)
+assert perr < 1e-10, perr
+assert verr < 1e-10, verr
+print("OK")
+""",
+        ndev=8,
+        timeout=1800,
+    )
+
+
+def test_schur_compiled_1rank_matches_8rank():
+    """Same compiled Schur solve on 1 device and on a 2x2x2 mesh: the
+    distributed program must reproduce the single-rank pressure and
+    velocity (and take the same outer/inner iteration counts) — the
+    rank-count invariance the fused tree reductions guarantee."""
+    run(
+        """
+jax.config.update("jax_enable_x64", True)
+from repro.apps.stokes import Stokes3D
+from repro.core import make_grid_mesh
+from repro import fields
+
+multi = Stokes3D(nx=10, ny=10, nz=10, dims=(2, 2, 2))
+Vm, Pm, im = multi.solve(tol=1e-6, method="schur", compiled=True)
+mesh1 = make_grid_mesh(3, dims=(1, 1, 1), devices=jax.devices()[:1])
+single = Stokes3D(nx=18, ny=18, nz=18, mesh=mesh1)
+assert single.grid.global_shape == multi.grid.global_shape
+Vs, Ps, isg = single.solve(tol=1e-6, method="schur", compiled=True)
+print("8-rank:", im)
+print("1-rank:", isg)
+assert im.converged and isg.converged
+assert im.outer_iterations == isg.outer_iterations, (im, isg)
+gp = single.grid.gather(Ps.data)[1:-1, 1:-1, 1:-1]
+gm = multi.grid.gather(Pm.data)[1:-1, 1:-1, 1:-1]
+perr = np.abs(gm - gp).max() / (np.abs(gp).max() + 1e-300)
+verr = max(np.abs(fields.gather(Vm[k]) - fields.gather(Vs[k])).max()
+           for k in Vm.keys())
+print("P 1-vs-8 diff", perr, "V diff", verr)
+assert perr < 1e-8, perr
+assert verr < 1e-8, verr
+print("OK")
+""",
+        ndev=8,
+        timeout=1800,
+    )
+
+
 def test_freeslip_schur_matches_oracle():
     """Free-slip BCs end to end: the Schur-CG solution on 8 ranks agrees
     with the independent oracle (coupled CG + Uzawa) under the
